@@ -1,0 +1,90 @@
+"""Shared benchmark fixtures: a *trained* tiny DDIM (cached to disk).
+
+Quantization benchmarks on a random network measure noise; the paper's
+tables quantize trained models. We train the reduced DDIM (16x16 UNet)
+on the synthetic Gaussian-bump distribution for a few hundred steps once
+and cache the params — every table benchmark reuses it.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.tree import flatten_paths, unflatten_paths
+from repro.configs.diffusion_presets import tiny_ddim
+from repro.data.synthetic import gaussian_bump_images
+from repro.diffusion.schedule import make_schedule
+from repro.nn.unet import unet_apply, unet_init
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "tiny_ddim_params.npz")
+IMG = 16
+T = 200
+
+
+def train_tiny_ddim(steps: int = 400, batch: int = 16, lr: float = 2e-3,
+                    log=print) -> dict:
+    cfg = tiny_ddim(IMG)
+    sched = make_schedule("linear", T)
+    key = jax.random.PRNGKey(0)
+    params = unet_init(key, cfg)
+    acfg = AdamConfig(lr=lr, clip_norm=1.0)
+    opt = adam_init(params, acfg)
+
+    @jax.jit
+    def step(params, opt, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        x0 = gaussian_bump_images(k1, batch, IMG)
+        t = jax.random.randint(k2, (batch,), 0, T)
+        eps = jax.random.normal(k3, x0.shape)
+        xt = sched.q_sample(x0, t, eps)
+
+        def loss(p):
+            pred = unet_apply(p, xt, t.astype(jnp.float32), cfg)
+            return jnp.mean((pred - eps) ** 2)
+
+        l, g = jax.value_and_grad(loss)(params)
+        params_, opt_, _ = adam_update(g, opt, params, acfg)
+        return params_, opt_, l
+
+    t0 = time.time()
+    for i in range(steps):
+        key, k = jax.random.split(key)
+        params, opt, l = step(params, opt, k)
+        if i % 100 == 0:
+            log(f"  ddim-train step {i}: loss={float(l):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    log(f"  ddim-train done: loss={float(l):.4f}")
+    return params
+
+
+def get_tiny_ddim(retrain: bool = False, steps: int = 400, log=print):
+    """Returns (params, cfg, sched); trains + caches on first call."""
+    cfg = tiny_ddim(IMG)
+    sched = make_schedule("linear", T)
+    if not retrain and os.path.exists(CACHE):
+        data = np.load(CACHE)
+        flat = {k: jnp.asarray(v) for k, v in data.items()}
+        return unflatten_paths(flat), cfg, sched
+    params = train_tiny_ddim(steps=steps, log=log)
+    os.makedirs(os.path.dirname(CACHE), exist_ok=True)
+    np.savez(CACHE, **{k: np.asarray(v)
+                       for k, v in flatten_paths(params).items()})
+    return params, cfg, sched
+
+
+def timer(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

@@ -1,0 +1,55 @@
+"""Kernel microbenchmarks: us/call on this host (XLA path; Pallas targets
+
+TPU and is validated in interpret mode — wall-clock here measures the XLA
+fallback numerics, the bytes ratios are the hardware-independent part)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.kernels.ops as ops
+from benchmarks.common import timer
+from repro.core.qmodule import pack_weight
+from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
+
+
+def rows(log=print) -> list[dict]:
+    out = []
+    key = jax.random.PRNGKey(0)
+    qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+
+    x = jax.random.normal(key, (1024, 1024), jnp.float32)
+    f = jax.jit(lambda x: ops.msfp_quantize(x, qp))
+    us = timer(f, x)
+    out.append({"name": "msfp_qdq_1Mx", "us_per_call": us,
+                "derived": f"{x.size * 8 / us / 1e3:.2f}GB/s eff"})
+
+    k, n, m = 2048, 2048, 256
+    w = jax.random.normal(key, (k, n), jnp.float32)
+    pw = pack_weight(w, qp)
+    xb = jax.random.normal(key, (m, k), jnp.bfloat16)
+    f_w4 = jax.jit(lambda x: ops.w4_matmul(x, pw))
+    us_w4 = timer(f_w4, xb)
+    wd = w.astype(jnp.bfloat16)
+    f_bf = jax.jit(lambda x: x @ wd)
+    us_bf = timer(f_bf, xb)
+    out.append({"name": "w4_matmul_256x2048x2048", "us_per_call": us_w4,
+                "derived": f"weight bytes 4x smaller; bf16 dense={us_bf:.0f}us"})
+    out.append({"name": "dense_bf16_matmul_ref", "us_per_call": us_bf,
+                "derived": "baseline"})
+
+    t = jax.random.normal(key, (128, 32, 8, 128), jnp.bfloat16)
+    f_enc = jax.jit(lambda t: ops.kv4_encode(t))
+    us_e = timer(f_enc, t)
+    packed, scale = f_enc(t)
+    f_dec = jax.jit(lambda p, s: ops.kv4_decode(p, s))
+    us_d = timer(f_dec, packed, scale)
+    ratio = t.size * 2 / (packed.size + scale.size * 2)
+    out.append({"name": "kv4_encode_4Mv", "us_per_call": us_e,
+                "derived": f"cache bytes /{ratio:.2f}"})
+    out.append({"name": "kv4_decode_4Mv", "us_per_call": us_d,
+                "derived": ""})
+    for r in out:
+        log(f"  {r['name']},{r['us_per_call']:.0f}us,{r['derived']}")
+    return out

@@ -1,0 +1,108 @@
+"""Roofline report: turn experiments/dryrun/*.json into the §Roofline table.
+
+Hardware model (TPU v5e):
+  peak_flops  = 197e12 FLOP/s bf16 per chip
+  hbm_bw      = 819e9  B/s per chip
+  ici_bw      = 50e9   B/s per link (collective term uses per-device
+                collective bytes / link bw — a 1-link serialization bound;
+                all-reduce payloads already carry the 2x factor)
+
+Terms (per device, per step):
+  compute    = extrap.flops / peak_flops
+  memory     = extrap['bytes accessed'] / hbm_bw
+  collective = extrap.collective_bytes / ici_bw
+
+MODEL_FLOPS: 6*N*D for dense train (N params, D tokens), 6*N_active*D for
+MoE; 2*N*B per decode step (B new tokens); 2*N*D prefill. The ratio
+MODEL/HLO flags remat + replication waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+SHAPE_TOKENS = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+                "decode_32k": (32768, 128), "long_500k": (524288, 1)}
+
+
+def model_flops(rec: dict) -> float:
+    seq, gb = SHAPE_TOKENS[rec["shape"]]
+    n = rec["active_params"]
+    if rec["kind"] == "train":
+        return 6.0 * n * seq * gb
+    if rec["kind"] == "prefill":
+        return 2.0 * n * seq * gb
+    return 2.0 * n * gb  # decode: one token per sequence
+
+
+def analyze(rec: dict) -> dict:
+    chips = rec["chips"]
+    fl = rec["extrap"]["cost"].get("flops", 0.0)
+    by = rec["extrap"]["cost"].get("bytes accessed", 0.0)
+    co = rec["extrap"]["collective_bytes"]
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_x = co / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec)
+    t_ideal = mf / chips / PEAK_FLOPS
+    t_bound = max(t_c, t_m, t_x)
+    return {
+        "cell": f"{rec['arch']}/{rec['shape']}",
+        "mesh": rec["mesh"], "quant": rec.get("quant", "bf16"),
+        "kv": rec.get("kv", "bf16"),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_total": fl * chips,
+        "useful_ratio": mf / (fl * chips) if fl else 0.0,
+        "roofline_frac": t_ideal / t_bound if t_bound else 0.0,
+        "hbm_gb_per_dev": rec.get("memory", {}).get("temp_size_in_bytes", 0)
+        / 1e9,
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def report(dirpath: str = "experiments/dryrun", mesh: str = "single",
+           quant: str | None = None, kv: str | None = None,
+           log=print) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            continue
+        if rec["mesh"] != mesh:
+            continue
+        if quant is not None and rec.get("quant", "bf16") != quant:
+            continue
+        if kv is not None and rec.get("kv", "bf16") != kv:
+            continue
+        rows.append(analyze(rec))
+    rows.sort(key=lambda r: r["cell"])
+    log(f"| cell | dom | compute | memory | collective | useful(6ND/HLO) "
+        f"| roofline-frac | HBM GB/dev |")
+    log("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        log(f"| {r['cell']} | {r['dominant'][:4]} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_frac']:.3f} "
+            f"| {r['hbm_gb_per_dev']:.1f} |")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    report(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")

@@ -1,0 +1,63 @@
+"""Benchmark orchestrator — one section per paper table/figure + kernels.
+
+``python -m benchmarks.run [--only t4,...] [--retrain]``
+Prints `name,value,derived` CSV lines per section and writes
+experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: t1,t4,t5,t7,fig3,fig4,kernels")
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(k):
+        return only is None or k in only
+
+    results = {}
+    t0 = time.time()
+    from benchmarks.common import get_tiny_ddim
+    get_tiny_ddim(retrain=args.retrain)  # build/reuse the trained fixture
+    print(f"# fixture ready ({time.time() - t0:.0f}s)")
+
+    from benchmarks import kernel_bench, paper_tables
+
+    if want("kernels"):
+        print("## kernels (name,us_per_call,derived)")
+        results["kernels"] = kernel_bench.rows()
+    if want("fig4"):
+        print("## fig4: AAL strategies (paper: unsigned+zp improves >95%)")
+        results["fig4"] = paper_tables.fig4_aal_strategies()
+    if want("fig3"):
+        print("## fig3: loss alignment (DFA should correlate with true gap)")
+        results["fig3"] = paper_tables.fig3_loss_alignment()
+    if want("t5"):
+        print("## table5: weight maxval search spaces")
+        results["table5"] = paper_tables.table5_search_space()
+    if want("t7"):
+        print("## table7: FP vs INT PTQ (no finetune)")
+        results["table7"] = paper_tables.table7_fp_vs_int()
+    if want("t1"):
+        print("## table1: LoRA allocation strategies")
+        results["table1"] = paper_tables.table1_lora_alloc()
+    if want("t4"):
+        print("## table4: ablation (MSFP / TALoRA / DFA)")
+        results["table4"] = paper_tables.table4_ablation()
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"# total {time.time() - t0:.0f}s -> experiments/bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

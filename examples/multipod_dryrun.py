@@ -1,0 +1,49 @@
+"""Walkthrough: one multi-pod dry-run cell + its roofline terms.
+
+Spawns the dry-run (it must own jax initialization for the 512 host
+devices) for a single (arch, shape) on the 2x16x16 mesh, then prints the
+derived roofline terms — the minimal version of what
+``python -m repro.launch.dryrun --arch all --shape all --mesh both`` does
+for the full matrix.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py --arch gemma3-4b --shape decode_32k
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--quant", default="w4")
+    ap.add_argument("--kv", default="fp4")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as d:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape, "--mesh", "multi",
+               "--quant", args.quant, "--kv", args.kv, "--out", d]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+        print("+", " ".join(cmd))
+        subprocess.run(cmd, check=True, env=env)
+        rec = json.load(open(os.path.join(d, os.listdir(d)[0])))
+
+    from benchmarks.roofline import analyze, fmt_s
+    r = analyze(rec)
+    print(f"\ncell {r['cell']} on {rec['chips']} chips "
+          f"(quant={args.quant}, kv={args.kv})")
+    print(f"  compute    {fmt_s(r['compute_s'])}")
+    print(f"  memory     {fmt_s(r['memory_s'])}")
+    print(f"  collective {fmt_s(r['collective_s'])}")
+    print(f"  dominant   {r['dominant']}   roofline-frac {r['roofline_frac']:.3f}")
+    print(f"  HBM/dev    {r['hbm_gb_per_dev']:.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Distributed checkpointing: npz shards + manifest, atomic, keep-k, resume.
+
+Design goals for fleet-scale runs:
+  * **Atomic**: writes land in ``step_N.tmp`` then ``rename`` to ``step_N``
+    — a preempted save never corrupts the latest checkpoint.
+  * **Mesh-independent restore**: leaves are stored by logical path name,
+    gathered to host; restore re-shards onto whatever mesh the new job
+    runs (elastic resize: save on 4 hosts, restore on 2 — tested).
+  * **Integrity**: manifest.json records shapes/dtypes + a cheap checksum
+    per leaf; restore verifies before handing params to the trainer.
+  * **Background save**: ``save_async`` snapshots to host then writes on a
+    thread so the train loop only blocks for the device->host copy.
+  * **keep-k GC** with the newest always retained.
+
+On a real fleet each host writes only its addressable shards; here the
+single-process path gathers fully (jax.device_get handles sharded arrays).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.tree import flatten_paths, unflatten_paths
+
+_MANIFEST = "manifest.json"
+_DATA = "arrays.npz"
+
+
+def _checksum(a: np.ndarray) -> str:
+    # cheap but order-sensitive: hash of strided subsample + shape
+    sub = a.reshape(-1)[:: max(1, a.size // 4096)]
+    h = hashlib.sha256()
+    h.update(str(a.shape).encode())
+    h.update(str(a.dtype).encode())
+    h.update(np.ascontiguousarray(sub).tobytes())
+    return h.hexdigest()[:16]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- paths ------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, d, _MANIFEST)):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> str:
+        host_tree = jax.device_get(tree)
+        return self._write(step, host_tree, extra or {})
+
+    def save_async(self, step: int, tree: Any, extra: dict | None = None):
+        """Snapshot to host synchronously, write on a background thread."""
+        host_tree = jax.device_get(tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree, extra or {}))
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any, extra: dict) -> str:
+        flat = flatten_paths(host_tree)
+        arrays = {}
+        manifest = {"step": step, "extra": extra, "time": time.time(),
+                    "leaves": {}}
+        for i, (path, leaf) in enumerate(sorted(flat.items())):
+            arr = np.asarray(leaf)
+            key = f"a{i}"
+            arrays[key] = arr
+            manifest["leaves"][path] = {
+                "key": key, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "checksum": _checksum(arr),
+            }
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, _DATA), **arrays)
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def restore(self, step: int | None = None, *, verify: bool = True,
+                shardings: Any = None) -> tuple[int, Any, dict]:
+        """Returns (step, tree, extra). ``shardings``: optional pytree of
+
+        NamedShardings (same structure) to place leaves onto a new mesh."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, _MANIFEST)) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, _DATA))
+        flat = {}
+        for path, meta in manifest["leaves"].items():
+            arr = data[meta["key"]]
+            if verify and _checksum(arr) != meta["checksum"]:
+                raise IOError(f"checksum mismatch at {path} in step {step}")
+            flat[path] = arr
+        tree = unflatten_paths(flat)
+        if shardings is not None:
+            flat_s = flatten_paths(shardings)
+            flat_t = flatten_paths(tree)
+            placed = {p: jax.device_put(v, flat_s[p]) if p in flat_s else v
+                      for p, v in flat_t.items()}
+            tree = unflatten_paths(placed)
+        else:
+            tree = jax.tree.map(jnp.asarray, tree)
+        return step, tree, manifest.get("extra", {})

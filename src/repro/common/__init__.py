@@ -1,0 +1,1 @@
+"""Shared utilities: pytree paths, sharding hints."""

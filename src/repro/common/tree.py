@@ -1,0 +1,84 @@
+"""Path-keyed pytree utilities (nested dicts of arrays)."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def flatten_paths(tree: Any, prefix: str = "", sep: str = "/") -> dict[str, Any]:
+    """Nested dicts/lists -> {'a/b/#0/c': leaf} (lists keyed '#<idx>')."""
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten_paths(v, f"{prefix}{k}{sep}", sep))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(flatten_paths(v, f"{prefix}#{i}{sep}", sep))
+    else:
+        out[prefix[: -len(sep)]] = tree
+    return out
+
+
+def unflatten_paths(flat: dict[str, Any], sep: str = "/") -> Any:
+    root: dict = {}
+    for path, leaf in flat.items():
+        parts = path.split(sep)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        node = {k: listify(v) for k, v in node.items()}
+        if node and all(k.startswith("#") for k in node):
+            return [node[f"#{i}"] for i in range(len(node))]
+        return node
+
+    return listify(root)
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: Any,
+                  prefix: str = "", sep: str = "/") -> Any:
+    if isinstance(tree, dict):
+        return {k: map_with_path(fn, v, f"{prefix}{k}{sep}", sep)
+                for k, v in tree.items()}
+    return fn(prefix[: -len(sep)], tree)
+
+
+def get_path(tree: Any, path: str, sep: str = "/") -> Any:
+    node = tree
+    for p in path.split(sep):
+        node = node[p]
+    return node
+
+
+def set_path(tree: dict, path: str, value: Any, sep: str = "/") -> dict:
+    """Functional set: returns a new tree with ``path`` replaced."""
+    parts = path.split(sep)
+    new = dict(tree)
+    node = new
+    for p in parts[:-1]:
+        node[p] = dict(node[p])
+        node = node[p]
+    node[parts[-1]] = value
+    return new
+
+
+def tree_bytes(tree: Any) -> int:
+    leaves = jax.tree.leaves(tree)
+    return sum(l.size * l.dtype.itemsize for l in leaves
+               if hasattr(l, "size") and hasattr(l, "dtype"))
+
+
+def count_params(tree: Any) -> int:
+    return sum(l.size for l in jax.tree.leaves(tree) if hasattr(l, "size"))
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    return jax.tree.map(
+        lambda l: l.astype(dtype) if hasattr(l, "astype")
+        and jnp.issubdtype(l.dtype, jnp.floating) else l, tree)

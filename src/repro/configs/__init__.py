@@ -1,0 +1,1 @@
+"""Per-architecture configs + shape sets + diffusion presets."""

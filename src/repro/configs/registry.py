@@ -1,0 +1,32 @@
+"""Architecture registry: --arch <id> -> LMConfig (full or smoke)."""
+from __future__ import annotations
+
+from repro.configs import (gemma3_27b, gemma3_4b, kimi_k2_1t,
+                           llama4_scout, llava_next_mistral_7b, mamba2_370m,
+                           musicgen_large, qwen15_05b, smollm_135m,
+                           zamba2_27b)
+from repro.configs.shapes import LONG_OK, SHAPES, ShapeSpec, cells
+
+ARCHS = {
+    "mamba2-370m": mamba2_370m,
+    "qwen1.5-0.5b": qwen15_05b,
+    "gemma3-27b": gemma3_27b,
+    "gemma3-4b": gemma3_4b,
+    "smollm-135m": smollm_135m,
+    "kimi-k2-1t-a32b": kimi_k2_1t,
+    "llama4-scout-17b-a16e": llama4_scout,
+    "musicgen-large": musicgen_large,
+    "llava-next-mistral-7b": llava_next_mistral_7b,
+    "zamba2-2.7b": zamba2_27b,
+}
+
+ARCH_IDS = list(ARCHS)
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = ARCHS[arch]
+    return mod.smoke() if smoke else mod.full()
+
+
+def all_cells():
+    return cells(ARCH_IDS)

@@ -1,0 +1,14 @@
+"""The paper's contribution: MSFP + TALoRA + DFA, composable JAX modules."""
+from repro.core.msfp import (QuantPlan, SiteInfo, build_plan, build_mixed_plan,
+                             quantize_act, quantize_weight_tree,
+                             plan_mse_report, PLAN_MODES)
+from repro.core.talora import (TALoRAConfig, init_lora_hub, init_router,
+                               router_logits, ste_one_hot, route, lora_delta,
+                               lora_apply, merged_weight, allocation_histogram,
+                               lora_target_dims_from_weights, merge_into_tree)
+from repro.core.dfa import (denoising_factor, dfa_loss, plain_loss, eps_mse,
+                            denoising_gap)
+from repro.core.qmodule import (PackedW4, pack_weight, dequant_weight,
+                                w4_dense_xla, quantize_param_tree,
+                                encode_codes, decode_codes, pack_nibbles,
+                                unpack_nibbles)

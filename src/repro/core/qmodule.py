@@ -1,0 +1,161 @@
+"""W4 packed-weight representation for quantized serving.
+
+Fake-quant (quantize-dequantize in bf16) proves quality; deployment stores
+each quantized weight as packed 4-bit codes (two per uint8) plus a scalar
+(or per-channel) scale and reconstructs bf16 values on the fly. On TPU the
+reconstruction happens inside the Pallas matmul kernel (HBM traffic =
+packed bytes); the XLA fallback here decodes then calls ``dot``.
+
+Code layout (matches ``repro.quant.formats.quant_codes``):
+  [sign | exponent p | mantissa m]   (sign bit only for signed formats)
+  p = 0 -> subnormal m/2^M ; p >= 1 -> 2^(p-1) * (1 + m/2^M)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.fakequant import QuantizerParams
+from repro.quant.formats import FPFormat, snap_to_base_grid
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PackedW4:
+    """A weight quantized to a 4-bit FP format and packed 2-codes/byte."""
+
+    packed: jnp.ndarray                                   # uint8, (..., K/2)
+    scale: jnp.ndarray                                    # f32 scalar or (out,)
+    zero_point: jnp.ndarray                               # f32 (unsigned fmts)
+    exp_bits: int = dataclasses.field(metadata=dict(static=True))
+    man_bits: int = dataclasses.field(metadata=dict(static=True))
+    signed: bool = dataclasses.field(metadata=dict(static=True))
+    shape: tuple = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def fmt(self) -> FPFormat:
+        return FPFormat(self.exp_bits, self.man_bits, self.signed)
+
+
+def encode_codes(w: jnp.ndarray, fmt: FPFormat, maxval: jnp.ndarray,
+                 zero_point: jnp.ndarray | float = 0.0) -> jnp.ndarray:
+    """Arithmetic nearest-code encode (jit-able; no LUT search)."""
+    w = w.astype(jnp.float32)
+    scale = jnp.asarray(maxval, jnp.float32) / fmt.base_max
+    inv = 1.0 / jnp.maximum(scale, 1e-30)
+    if fmt.signed:
+        y = jnp.abs(w) * inv
+        sign = (w < 0).astype(jnp.uint8)
+    else:
+        y = jnp.clip((w - zero_point) * inv, 0.0, None)
+        sign = None
+    v = snap_to_base_grid(y, fmt)
+    man = fmt.man_bits
+    if fmt.exp_bits == 0:
+        code = jnp.round(v * 2**man).astype(jnp.uint8)
+    else:
+        # v is exactly representable; recover (p, m).
+        safe = jnp.maximum(v, 2.0**-40)
+        oct_ = jnp.clip(jnp.floor(jnp.log2(safe)), 0, 2**fmt.exp_bits - 2)
+        is_sub = v < 1.0
+        p = jnp.where(is_sub, 0, oct_.astype(jnp.int32) + 1)
+        m_sub = jnp.round(v * 2**man)
+        m_norm = jnp.round((v / jnp.exp2(oct_) - 1.0) * 2**man)
+        m = jnp.where(is_sub, m_sub, m_norm).astype(jnp.int32)
+        code = ((p << man) | m).astype(jnp.uint8)
+    if fmt.signed:
+        code = code | (sign << (fmt.exp_bits + fmt.man_bits))
+    return code
+
+
+def decode_codes(code: jnp.ndarray, fmt: FPFormat, scale: jnp.ndarray,
+                 zero_point: jnp.ndarray | float = 0.0,
+                 dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Arithmetic code -> value decode (the in-kernel dequant, XLA version)."""
+    man = fmt.man_bits
+    code = code.astype(jnp.int32)
+    nbits = fmt.exp_bits + fmt.man_bits
+    if fmt.signed:
+        sign = (code >> nbits) & 1
+        code = code & ((1 << nbits) - 1)
+    if fmt.exp_bits == 0:
+        mag = code.astype(jnp.float32) / 2**man
+    else:
+        p = code >> man
+        m = (code & (2**man - 1)).astype(jnp.float32)
+        mag = jnp.where(p == 0, m / 2**man,
+                        jnp.exp2((p - 1).astype(jnp.float32)) * (1 + m / 2**man))
+    s = jnp.asarray(scale, jnp.float32) / fmt.base_max * fmt.base_max  # noqa: keep f32
+    val = mag * (jnp.asarray(scale, jnp.float32) / fmt.base_max)
+    if fmt.signed:
+        val = jnp.where(sign == 1, -val, val)
+    else:
+        val = val + zero_point
+    return val.astype(dtype)
+
+
+def pack_nibbles(codes: jnp.ndarray) -> jnp.ndarray:
+    """(..., K) uint8 codes<16 -> (..., K/2), split-half layout:
+
+    packed[..., j] = codes[..., j] | codes[..., j + K/2] << 4.
+    Split-half (vs adjacent-interleave) keeps the unpack a concat — no
+    lane interleave — so the Pallas matmul kernel can address the two
+    output halves with a grid dimension instead of a shuffle.
+    """
+    assert codes.shape[-1] % 2 == 0, codes.shape
+    half = codes.shape[-1] // 2
+    lo = codes[..., :half]
+    hi = codes[..., half:]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+def pack_weight(w: jnp.ndarray, qp: QuantizerParams) -> PackedW4:
+    """Quantize + pack one weight under its searched parameters."""
+    fmt = qp.fmt
+    assert fmt.bits == 4, f"packing is 4-bit only, got {fmt.bits}"
+    codes = encode_codes(w, fmt, qp.maxval, qp.zero_point)
+    scale = jnp.asarray(qp.maxval, jnp.float32)
+    # zero_point mirrors the scale's shape so stacked (per-layer) packs stay
+    # scannable (lax.scan needs equal leading dims on every leaf)
+    zp = jnp.broadcast_to(jnp.asarray(qp.zero_point, jnp.float32), scale.shape)
+    return PackedW4(pack_nibbles(codes), scale, zp,
+                    fmt.exp_bits, fmt.man_bits, fmt.signed, tuple(w.shape))
+
+
+def dequant_weight(pw: PackedW4, dtype=jnp.bfloat16) -> jnp.ndarray:
+    codes = unpack_nibbles(pw.packed)
+    return decode_codes(codes, pw.fmt, pw.scale, pw.zero_point, dtype)
+
+
+def w4_dense_xla(x: jnp.ndarray, pw: PackedW4, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """XLA fallback: decode -> dot. (TPU path: kernels.ops.w4_matmul.)"""
+    w = dequant_weight(pw, dtype)
+    return x.astype(dtype) @ w
+
+
+def quantize_param_tree(params: dict, plan, prefix: str = "") -> Any:
+    """Replace planned 4-bit weights with PackedW4 leaves (serving form).
+
+    Walks nested dicts; leaf site names are '/'-joined paths. Non-planned
+    leaves and non-4-bit sites stay dense.
+    """
+    out = {}
+    for k, v in params.items():
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out[k] = quantize_param_tree(v, plan, path + "/")
+        elif (path in plan.sites and plan.sites[path].is_weight
+              and plan.sites[path].qp.bits == 4 and v.ndim >= 2):
+            out[k] = pack_weight(v, plan.sites[path].qp)
+        else:
+            out[k] = v
+    return out

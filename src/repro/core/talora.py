@@ -1,0 +1,166 @@
+"""TALoRA — Timestep-Aware LoRA hub + learnable router (paper §4.2).
+
+Each quantized layer carries a hub of ``h`` LoRA adapters. A single router,
+shared across all timesteps, maps the (pre-trained, frozen) sinusoidal
+timestep embedding through an MLP to per-(layer, slot) logits; a
+straight-through argmax turns those into a hard one-of-h selection, so
+exactly one adapter is active per layer per timestep (App. E: inference
+cost equals a single LoRA) while gradients still reach the router through
+the softmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.embeddings import timestep_embedding
+
+
+@dataclasses.dataclass(frozen=True)
+class TALoRAConfig:
+    hub_size: int = 2          # h — paper finds h=2 optimal (App. E.2)
+    rank: int = 32             # paper App. C
+    alpha: float = 32.0        # scaling = alpha / rank
+    router_hidden: int = 128
+    t_emb_dim: int = 128       # timestep embedding dim fed to the router
+
+
+def init_lora_hub(key, layer_dims: dict[str, tuple[int, int]],
+                  cfg: TALoRAConfig, dtype=jnp.float32) -> dict[str, Any]:
+    """Per-layer hubs: A ~ N(0, 1/r) (h, in, r); B = 0 (h, r, out)."""
+    hubs = {}
+    for name, (d_in, d_out) in layer_dims.items():
+        key, k = jax.random.split(key)
+        hubs[name] = {
+            "A": (jax.random.normal(k, (cfg.hub_size, d_in, cfg.rank), dtype)
+                  / jnp.sqrt(cfg.rank)),
+            "B": jnp.zeros((cfg.hub_size, cfg.rank, d_out), dtype),
+        }
+    return hubs
+
+
+def init_router(key, n_layers: int, cfg: TALoRAConfig,
+                dtype=jnp.float32) -> dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    scale1 = 1.0 / jnp.sqrt(cfg.t_emb_dim)
+    scale2 = 1.0 / jnp.sqrt(cfg.router_hidden)
+    return {
+        "w1": jax.random.normal(k1, (cfg.t_emb_dim, cfg.router_hidden), dtype) * scale1,
+        "b1": jnp.zeros((cfg.router_hidden,), dtype),
+        "w2": jax.random.normal(k2, (cfg.router_hidden, n_layers * cfg.hub_size), dtype) * scale2,
+        "b2": jnp.zeros((n_layers * cfg.hub_size,), dtype),
+    }
+
+
+def router_logits(router: dict, t: jnp.ndarray, n_layers: int,
+                  cfg: TALoRAConfig) -> jnp.ndarray:
+    """(n_layers, h) logits for scalar timestep t."""
+    emb = timestep_embedding(jnp.asarray(t, jnp.float32), cfg.t_emb_dim)
+    hdn = jnp.tanh(emb @ router["w1"] + router["b1"])
+    out = hdn @ router["w2"] + router["b2"]
+    return out.reshape(n_layers, cfg.hub_size)
+
+
+def ste_one_hot(logits: jnp.ndarray) -> jnp.ndarray:
+    """Hard one-hot over the last axis; softmax gradient (STE, ref. [1])."""
+    soft = jax.nn.softmax(logits, axis=-1)
+    hard = jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                          dtype=soft.dtype)
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def route(router: dict, t: jnp.ndarray, layer_names: list[str],
+          cfg: TALoRAConfig) -> dict[str, jnp.ndarray]:
+    """Per-layer hard selection weights (h,) for timestep t."""
+    sel = ste_one_hot(router_logits(router, t, len(layer_names), cfg))
+    return {name: sel[i] for i, name in enumerate(layer_names)}
+
+
+def lora_delta(x: jnp.ndarray, hub: dict[str, jnp.ndarray],
+               sel: jnp.ndarray, cfg: TALoRAConfig) -> jnp.ndarray:
+    """Selected adapter's contribution: (x @ A_sel) @ B_sel * alpha/r.
+
+    ``sel`` is the (h,) STE one-hot; contracting the hub with it keeps the
+    router differentiable while executing a single adapter's math.
+    """
+    a_sel = jnp.einsum("h,hir->ir", sel, hub["A"])
+    b_sel = jnp.einsum("h,hro->ro", sel, hub["B"])
+    scale = cfg.alpha / cfg.rank
+    return ((x @ a_sel) @ b_sel) * scale
+
+
+def lora_apply(x: jnp.ndarray, w_q: jnp.ndarray, hub: dict | None,
+               sel: jnp.ndarray | None, cfg: TALoRAConfig) -> jnp.ndarray:
+    """y = x @ W_quantized + LoRA_sel(x)."""
+    y = x @ w_q
+    if hub is not None and sel is not None:
+        y = y + lora_delta(x, hub, sel, cfg)
+    return y
+
+
+def merged_weight(w_q: jnp.ndarray, hub: dict, sel: jnp.ndarray,
+                  cfg: TALoRAConfig) -> jnp.ndarray:
+    """W_q + A_sel B_sel * alpha/r — used to fold the adapter for serving."""
+    a_sel = jnp.einsum("h,hir->ir", sel, hub["A"])
+    b_sel = jnp.einsum("h,hro->ro", sel, hub["B"])
+    return w_q + (a_sel @ b_sel) * (cfg.alpha / cfg.rank)
+
+
+def lora_target_dims_from_weights(weights: dict[str, jnp.ndarray],
+                                  cfg: TALoRAConfig | None = None
+                                  ) -> dict[str, tuple[int, int]]:
+    """Generic LoRA dims for flat path->weight maps: (prod(in dims), out).
+
+    Covers dense (in, out) and conv (kh, kw, cin, cout) sites uniformly —
+    a conv LoRA with A reshaped to (kh, kw, cin, r) is exactly the low-rank
+    kernel update ``(A @ B).reshape(w.shape)``.
+    """
+    dims = {}
+    for name, w in weights.items():
+        if hasattr(w, "ndim") and w.ndim >= 2:
+            d_in = 1
+            for s in w.shape[:-1]:
+                d_in *= s
+            dims[name] = (d_in, w.shape[-1])
+    return dims
+
+
+def merge_into_tree(params: dict, hubs: dict[str, dict],
+                    sels: dict[str, jnp.ndarray], cfg: TALoRAConfig) -> dict:
+    """Fold each site's selected adapter into its (frozen, fake-quantized)
+    weight: w_eff = w_q + (A_sel @ B_sel).reshape(w.shape) * alpha/r.
+
+    Identical math to running the adapter as a parallel branch (for both
+    dense and conv sites) but keeps model code LoRA-agnostic. ``params`` is
+    a nested tree; hub keys are '/'-joined weight paths (ending in the
+    param leaf name, e.g. 'mid/attn/q/w').
+    """
+    from repro.common.tree import flatten_paths, unflatten_paths
+
+    flat = flatten_paths(params)
+    scale = cfg.alpha / cfg.rank
+    for site, hub in hubs.items():
+        sel = sels[site]
+        w = flat[site]
+        a_sel = jnp.einsum("h,hir->ir", sel, hub["A"])
+        b_sel = jnp.einsum("h,hro->ro", sel, hub["B"])
+        delta = (a_sel @ b_sel).reshape(w.shape) * scale
+        flat[site] = jax.lax.stop_gradient(w) + delta.astype(w.dtype)
+    return unflatten_paths(flat)
+
+
+def allocation_histogram(router: dict, timesteps: jnp.ndarray,
+                         layer_names: list[str],
+                         cfg: TALoRAConfig) -> jnp.ndarray:
+    """(T, h) fraction of layers routed to each hub slot per timestep —
+
+    reproduces the paper's Fig. 7/9 allocation-over-timesteps plots."""
+    def per_t(t):
+        logits = router_logits(router, t, len(layer_names), cfg)
+        hard = jax.nn.one_hot(jnp.argmax(logits, axis=-1), cfg.hub_size)
+        return hard.mean(axis=0)
+
+    return jax.vmap(per_t)(timesteps)

@@ -1,0 +1,4 @@
+"""Diffusion substrate: schedules, samplers, quantization pipeline."""
+from repro.diffusion.schedule import NoiseSchedule, make_schedule, sample_timesteps
+from repro.diffusion.samplers import (ddim_sample, ddim_step, plms_sample,
+                                      dpm_solver2_sample, SAMPLERS)

@@ -1,0 +1,121 @@
+"""Diffusion quantization pipeline: calibrate -> plan -> finetune -> sample.
+
+Glue between the paper's stages:
+  1. Build a Q-Diffusion-style calibration set: intermediate x_t states
+     collected along FP-teacher DDIM trajectories (uniform over timesteps).
+  2. Record per-site activations through the FP model, classify AAL/NAL,
+     run the MSFP search (core.msfp).
+  3. Fake-quantize the weights, attach TALoRA, fine-tune (train.finetune).
+  4. Sample with the quantized + TALoRA-merged model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.tree import flatten_paths, unflatten_paths
+from repro.core import msfp, talora
+from repro.diffusion.samplers import ddim_sample
+from repro.diffusion.schedule import NoiseSchedule
+from repro.nn.unet import UNetConfig, io_sites, unet_apply
+from repro.quant.calibrate import CalibrationDB, QuantContext
+
+
+@dataclasses.dataclass
+class QuantizedDiffusion:
+    """Everything needed to run / fine-tune the quantized model."""
+    cfg: UNetConfig
+    sched: NoiseSchedule
+    fp_params: dict
+    q_params: dict              # weights fake-quantized under `plan`
+    plan: msfp.QuantPlan
+    talora_cfg: talora.TALoRAConfig | None = None
+    hubs: dict | None = None
+    router: dict | None = None
+
+    def teacher_eps(self, x, t, y=None):
+        return unet_apply(self.fp_params, x, t, self.cfg, y=y)
+
+    def student_eps(self, x, t, y=None, hubs=None, router=None):
+        """Quantized forward; TALoRA merged for the (scalar-equal) batch t."""
+        hubs = hubs if hubs is not None else self.hubs
+        router = router if router is not None else self.router
+        params = self.q_params
+        if hubs is not None and router is not None:
+            names = sorted(hubs)
+            sels = talora.route(router, t.reshape(-1)[0], names,
+                                self.talora_cfg)
+            params = talora.merge_into_tree(params, hubs, sels, self.talora_cfg)
+        ctx = QuantContext("quantize", plan=self.plan,
+                          act_fn=msfp.quantize_act)
+        return unet_apply(params, x, t, self.cfg, y=y, ctx=ctx)
+
+
+def build_calibration_set(fp_params, cfg: UNetConfig, sched: NoiseSchedule,
+                          key, *, n_samples: int = 32, steps: int = 20,
+                          batch: int = 8) -> list[tuple[int, np.ndarray]]:
+    """Q-Diffusion calibration: (t, x_t) states from FP DDIM trajectories."""
+    taps: list[tuple[int, np.ndarray]] = []
+    eps_fn = jax.jit(lambda x, t: unet_apply(fp_params, x, t, cfg))
+    n_batches = max(1, n_samples // batch)
+    for b in range(n_batches):
+        key, k = jax.random.split(key)
+        _, tp = ddim_sample(eps_fn, sched, (batch, cfg.image_size,
+                                            cfg.image_size, cfg.in_ch), k,
+                            steps=steps, collect_every=1)
+        taps.extend(tp)
+    return taps
+
+
+def calibrate_activations(fp_params, cfg: UNetConfig,
+                          calib: list[tuple[int, np.ndarray]],
+                          max_batches: int = 8) -> CalibrationDB:
+    db = CalibrationDB()
+    ctx = QuantContext("collect", db=db)
+    for t, x in calib[:max_batches]:
+        tb = jnp.full((x.shape[0],), t, jnp.float32)
+        unet_apply(fp_params, jnp.asarray(x), tb, cfg, ctx=ctx)
+    return db
+
+
+def quantize_diffusion(fp_params, cfg: UNetConfig, sched: NoiseSchedule, key,
+                       *, bits_w: int = 4, bits_a: int = 4,
+                       mode: str = "msfp",
+                       calib: list | None = None,
+                       talora_cfg: talora.TALoRAConfig | None = None
+                       ) -> QuantizedDiffusion:
+    """Stages 1-3 (without the fine-tune loop): returns a ready bundle."""
+    if calib is None:
+        calib = build_calibration_set(fp_params, cfg, sched, key)
+    db = calibrate_activations(fp_params, cfg, calib)
+    weights = {k: v for k, v in flatten_paths(fp_params).items()
+               if k.endswith("/w")}
+    plan = msfp.build_mixed_plan(weights, db, bits_w=bits_w, bits_a=bits_a,
+                                 mode=mode, io_sites=io_sites(fp_params))
+    qw = msfp.quantize_weight_tree(weights, plan)
+    flat = dict(flatten_paths(fp_params))
+    flat.update(qw)
+    q_params = unflatten_paths(flat)
+    bundle = QuantizedDiffusion(cfg, sched, fp_params, q_params, plan)
+    if talora_cfg is not None:
+        dims = talora.lora_target_dims_from_weights(
+            {k: v for k, v in qw.items() if v.ndim >= 2})
+        k1, k2 = jax.random.split(key)
+        bundle.talora_cfg = talora_cfg
+        bundle.hubs = talora.init_lora_hub(k1, dims, talora_cfg)
+        bundle.router = talora.init_router(k2, len(dims), talora_cfg)
+    return bundle
+
+
+def sample_quantized(bundle: QuantizedDiffusion, key, *, n: int = 8,
+                     steps: int = 20, eta: float = 0.0):
+    cfg = bundle.cfg
+    eps_fn = lambda x, t: bundle.student_eps(x, t)
+    x0, _ = ddim_sample(eps_fn, bundle.sched,
+                        (n, cfg.image_size, cfg.image_size, cfg.in_ch), key,
+                        steps=steps, eta=eta)
+    return x0

@@ -1,0 +1,122 @@
+"""Samplers: DDIM (the paper's main solver), PLMS and DPM-Solver-2 (App. F).
+
+All samplers take ``eps_fn(x_t, t) -> eps`` so the same code drives the FP
+teacher, the fake-quant student, and the TALoRA-merged student (the
+pipeline builds the eps_fn closure per configuration).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.diffusion.schedule import NoiseSchedule, sample_timesteps
+
+EpsFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def ddim_step(sched: NoiseSchedule, x_t, t: int, t_prev: int, eps,
+              eta: float = 0.0, noise=None):
+    """One DDIM update x_t -> x_{t_prev} (t_prev < t; t_prev = -1 -> x0)."""
+    ab_t = sched.alpha_bars[t]
+    ab_p = sched.alpha_bars[t_prev] if t_prev >= 0 else jnp.float32(1.0)
+    x0 = (x_t - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+    sigma = eta * jnp.sqrt((1 - ab_p) / (1 - ab_t)) * jnp.sqrt(1 - ab_t / ab_p)
+    dir_xt = jnp.sqrt(jnp.clip(1 - ab_p - sigma**2, 0.0)) * eps
+    x_prev = jnp.sqrt(ab_p) * x0 + dir_xt
+    if eta > 0 and noise is not None:
+        x_prev = x_prev + sigma * noise
+    return x_prev
+
+
+def ddim_sample(eps_fn: EpsFn, sched: NoiseSchedule, shape, key, *,
+                steps: int = 50, eta: float = 0.0,
+                collect_every: int = 0):
+    """Full DDIM sampling loop. Returns (x0, taps) where taps is a list of
+
+    (t, x_t) pairs when collect_every > 0 (Q-Diffusion calibration sets)."""
+    seq = sample_timesteps(sched.T, steps)
+    key, k0 = jax.random.split(key)
+    x = jax.random.normal(k0, shape)
+    taps = []
+    for i, t in enumerate(seq):
+        t_prev = int(seq[i + 1]) if i + 1 < len(seq) else -1
+        tb = jnp.full((shape[0],), t, jnp.float32)
+        eps = eps_fn(x, tb)
+        if collect_every and (i % collect_every == 0):
+            taps.append((int(t), np.asarray(x)))
+        key, kn = jax.random.split(key)
+        noise = jax.random.normal(kn, shape) if eta > 0 else None
+        x = ddim_step(sched, x, int(t), t_prev, eps, eta, noise)
+    return x, taps
+
+
+def plms_sample(eps_fn: EpsFn, sched: NoiseSchedule, shape, key, *,
+                steps: int = 50):
+    """Pseudo Linear Multi-Step (PLMS/PNDM) sampler, 4th-order AB corrector."""
+    seq = sample_timesteps(sched.T, steps)
+    key, k0 = jax.random.split(key)
+    x = jax.random.normal(k0, shape)
+    old_eps: list = []
+    for i, t in enumerate(seq):
+        t_prev = int(seq[i + 1]) if i + 1 < len(seq) else -1
+        tb = jnp.full((shape[0],), t, jnp.float32)
+        eps = eps_fn(x, tb)
+        if len(old_eps) == 0:
+            eps_prime = eps
+        elif len(old_eps) == 1:
+            eps_prime = (3 * eps - old_eps[-1]) / 2
+        elif len(old_eps) == 2:
+            eps_prime = (23 * eps - 16 * old_eps[-1] + 5 * old_eps[-2]) / 12
+        else:
+            eps_prime = (55 * eps - 59 * old_eps[-1] + 37 * old_eps[-2]
+                         - 9 * old_eps[-3]) / 24
+        old_eps = (old_eps + [eps])[-3:]
+        x = ddim_step(sched, x, int(t), t_prev, eps_prime)
+    return x
+
+
+def dpm_solver2_sample(eps_fn: EpsFn, sched: NoiseSchedule, shape, key, *,
+                       steps: int = 20):
+    """DPM-Solver-2 (midpoint) in log-SNR time (Lu et al. 2022)."""
+    seq = sample_timesteps(sched.T, steps)
+    key, k0 = jax.random.split(key)
+    x = jax.random.normal(k0, shape)
+
+    def lam(t):  # log-SNR/2
+        ab = sched.alpha_bars[t]
+        return 0.5 * jnp.log(ab / (1 - ab))
+
+    def coeffs(t):
+        ab = sched.alpha_bars[t]
+        return jnp.sqrt(ab), jnp.sqrt(1 - ab)  # alpha_t, sigma_t
+
+    for i in range(len(seq) - 1):
+        t, t_next = int(seq[i]), int(seq[i + 1])
+        l_t, l_n = lam(t), lam(t_next)
+        h = l_n - l_t
+        # midpoint timestep in lambda space
+        l_mid = l_t + 0.5 * h
+        # invert lambda -> nearest discrete timestep
+        lams = 0.5 * jnp.log(sched.alpha_bars / (1 - sched.alpha_bars))
+        t_mid = int(jnp.argmin(jnp.abs(lams - l_mid)))
+        a_t, s_t = coeffs(t)
+        a_m, s_m = coeffs(t_mid)
+        a_n, s_n = coeffs(t_next)
+        tb = jnp.full((shape[0],), t, jnp.float32)
+        eps1 = eps_fn(x, tb)
+        u = (a_m / a_t) * x - s_m * jnp.expm1(0.5 * h) * eps1
+        tbm = jnp.full((shape[0],), t_mid, jnp.float32)
+        eps2 = eps_fn(u, tbm)
+        x = (a_n / a_t) * x - s_n * jnp.expm1(h) * eps2
+    # final step to x0 with DDIM
+    t_last = int(seq[-1])
+    tb = jnp.full((shape[0],), t_last, jnp.float32)
+    x = ddim_step(sched, x, t_last, -1, eps_fn(x, tb))
+    return x
+
+
+SAMPLERS = {"ddim": ddim_sample, "plms": plms_sample,
+            "dpm_solver2": dpm_solver2_sample}

@@ -1,0 +1,65 @@
+"""Noise schedules: betas, alpha-bars, the DFA denoising factor gamma_t."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseSchedule:
+    betas: jnp.ndarray        # (T,)
+    alphas: jnp.ndarray       # (T,)
+    alpha_bars: jnp.ndarray   # (T,) cumulative products
+
+    @property
+    def T(self) -> int:
+        return self.betas.shape[0]
+
+    def gamma(self) -> jnp.ndarray:
+        """DFA denoising factor (paper Eq. 4) for every t."""
+        from repro.core.dfa import denoising_factor
+        return denoising_factor(self.alphas, self.alpha_bars)
+
+    def q_sample(self, x0, t, eps):
+        """Forward process Eq. 1: x_t = sqrt(abar) x0 + sqrt(1-abar) eps."""
+        ab = self.alpha_bars[t]
+        shape = (-1,) + (1,) * (x0.ndim - 1)
+        return (jnp.sqrt(ab).reshape(shape) * x0
+                + jnp.sqrt(1.0 - ab).reshape(shape) * eps)
+
+    def pred_x0(self, x_t, t, eps):
+        ab = self.alpha_bars[t]
+        shape = (-1,) + (1,) * (x_t.ndim - 1)
+        return ((x_t - jnp.sqrt(1.0 - ab).reshape(shape) * eps)
+                / jnp.sqrt(ab).reshape(shape))
+
+
+def make_schedule(kind: str = "linear", T: int = 1000, *,
+                  beta_start: float = 1e-4, beta_end: float = 0.02
+                  ) -> NoiseSchedule:
+    if kind == "linear":
+        betas = np.linspace(beta_start, beta_end, T, dtype=np.float64)
+    elif kind == "quad":  # DDIM paper's CelebA schedule
+        betas = np.linspace(beta_start**0.5, beta_end**0.5, T,
+                            dtype=np.float64) ** 2
+    elif kind == "cosine":
+        s = 0.008
+        ts = np.arange(T + 1, dtype=np.float64) / T
+        f = np.cos((ts + s) / (1 + s) * np.pi / 2) ** 2
+        ab = f / f[0]
+        betas = np.clip(1 - ab[1:] / ab[:-1], 0, 0.999)
+    else:
+        raise ValueError(kind)
+    alphas = 1.0 - betas
+    alpha_bars = np.cumprod(alphas)
+    return NoiseSchedule(jnp.asarray(betas, jnp.float32),
+                         jnp.asarray(alphas, jnp.float32),
+                         jnp.asarray(alpha_bars, jnp.float32))
+
+
+def sample_timesteps(T: int, steps: int) -> np.ndarray:
+    """DDIM uniform-stride timestep subsequence, descending."""
+    seq = np.linspace(0, T - 1, steps).round().astype(np.int64)
+    return np.unique(seq)[::-1].copy()

@@ -1,0 +1,105 @@
+"""Pallas TPU kernels: FP4 (signed E2M1) KV-cache encode / decode.
+
+Beyond-paper extension of MSFP to the decode-time memory bottleneck:
+K/V vectors are quantized per-(token, kv-head) with an absmax scale to the
+signed E2M1 grid and packed 2 codes/byte — 4.25x smaller cache traffic
+than bf16 (incl. fp16 scales), which is what a memory-bound decode step
+actually pays for. Encode runs once per generated token; decode runs on
+the full cache read each step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.quant.formats import FPFormat
+
+FMT = FPFormat(2, 1, True)  # E2M1 grid {0,.5,1,1.5,2,3,4,6} * scale/6
+
+
+def _encode_block(t, scale_inv):
+    """t: (r, hd) f32, scale_inv: (r, 1). Returns 4-bit codes (r, hd)."""
+    y = jnp.abs(t) * scale_inv * FMT.base_max          # into [0, 6]
+    oct_ = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(y, 2.0**-40))), 0, 2)
+    step = jnp.exp2(oct_ - 1)
+    v = jnp.minimum(jnp.round(y / step) * step, FMT.base_max)
+    is_sub = v < 1.0
+    p = jnp.where(is_sub, 0, jnp.clip(jnp.floor(jnp.log2(jnp.maximum(v, 2.0**-40))), 0, 2).astype(jnp.int32) + 1)
+    m_sub = jnp.round(v * 2.0)
+    m_norm = jnp.round((v / jnp.exp2(jnp.clip(jnp.floor(jnp.log2(jnp.maximum(v, 2.0**-40))), 0, 2)) - 1.0) * 2.0)
+    m = jnp.where(is_sub, m_sub, m_norm).astype(jnp.int32)
+    code = (p << 1) | m
+    return code | (jnp.where(t < 0, 8, 0))
+
+
+def _enc_kernel(t_ref, p_ref, s_ref):
+    t = t_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-6)
+    codes = _encode_block(t, 1.0 / scale)
+    half = codes.shape[-1] // 2
+    lo = codes[..., :half]
+    hi = codes[..., half:]
+    p_ref[...] = (lo | (hi << 4)).astype(jnp.uint8)
+    s_ref[...] = scale[..., 0].astype(jnp.float16)
+
+
+def _dec_kernel(p_ref, s_ref, o_ref):
+    packed = p_ref[...].astype(jnp.int32)
+    codes = jnp.concatenate([packed & 0xF, (packed >> 4) & 0xF], axis=-1)
+    sign = (codes >> 3) & 1
+    c = codes & 7
+    p = c >> 1
+    m = (c & 1).astype(jnp.float32)
+    mag = jnp.where(p == 0, m * 0.5,
+                    jnp.exp2((p - 1).astype(jnp.float32)) * (1 + 0.5 * m))
+    val = jnp.where(sign == 1, -mag, mag)
+    scale = s_ref[...].astype(jnp.float32)[..., None] / FMT.base_max
+    o_ref[...] = (val * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def kv4_encode_2d(t: jnp.ndarray, *, block_rows: int = 256,
+                  interpret: bool = False):
+    """t: (R, hd) -> packed (R, hd/2) uint8, scale (R,) f16."""
+    r, hd = t.shape
+    br = min(block_rows, r)
+    pr = (-r) % br
+    tp = jnp.pad(t, ((0, pr), (0, 0))) if pr else t
+    packed, scale = pl.pallas_call(
+        _enc_kernel,
+        grid=(tp.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, hd), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, hd // 2), lambda i: (i, 0)),
+                   pl.BlockSpec((br,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((tp.shape[0], hd // 2), jnp.uint8),
+                   jax.ShapeDtypeStruct((tp.shape[0],), jnp.float16)],
+        interpret=interpret,
+    )(tp)
+    return (packed[:r], scale[:r]) if pr else (packed, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "block_rows", "interpret"))
+def kv4_decode_2d(packed: jnp.ndarray, scale: jnp.ndarray, *,
+                  dtype=jnp.bfloat16, block_rows: int = 256,
+                  interpret: bool = False):
+    """packed: (R, hd/2), scale: (R,) -> (R, hd) dtype."""
+    r, hh = packed.shape
+    br = min(block_rows, r)
+    pr = (-r) % br
+    if pr:
+        packed = jnp.pad(packed, ((0, pr), (0, 0)))
+        scale = jnp.pad(scale, ((0, pr),))
+    out = pl.pallas_call(
+        _dec_kernel,
+        grid=(packed.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, hh), lambda i: (i, 0)),
+                  pl.BlockSpec((br,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((br, 2 * hh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((packed.shape[0], 2 * hh), dtype),
+        interpret=interpret,
+    )(packed, scale)
+    return out[:r] if pr else out

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused MSFP fake-quantization (quantize-dequantize).
+
+Bandwidth-bound elementwise op: one HBM read + one write per element,
+snapping to the ExMy grid arithmetically in VMEM (exponent via log2,
+mantissa rounding at the octave step) — no LUT, no gather. Tiles are
+(block_rows, block_cols) with the trailing dim a multiple of 128 lanes.
+
+The (maxval, zero_point) pair is traced data (searched per site), passed
+as a (1, 2) operand broadcast to every tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
+from repro.quant.formats import FPFormat
+
+
+def _qdq_block(x, maxval, zp, fmt: FPFormat, signed: bool):
+    """The in-VMEM snap — mirrors quant.fakequant.fp_qdq exactly."""
+    xf = x.astype(jnp.float32)
+    scale = maxval / fmt.base_max
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    y = jnp.abs(xf) * inv if signed else jnp.clip((xf - zp) * inv, 0.0, None)
+    man = fmt.man_bits
+    if fmt.exp_bits == 0:
+        step = 2.0**-man
+        q = jnp.minimum(jnp.round(y / step) * step, fmt.base_max)
+    else:
+        max_oct = 2**fmt.exp_bits - 2
+        safe = jnp.maximum(y, 2.0**-40)
+        oct_ = jnp.clip(jnp.floor(jnp.log2(safe)), 0, max_oct)
+        step = jnp.exp2(oct_ - man)
+        q = jnp.minimum(jnp.round(y / step) * step, fmt.base_max)
+    if signed:
+        out = jnp.sign(xf) * q * scale
+    else:
+        out = q * scale + zp
+    return out.astype(x.dtype)
+
+
+def _kernel(x_ref, mz_ref, o_ref, *, fmt: FPFormat, signed: bool):
+    maxval = mz_ref[0, 0]
+    zp = mz_ref[0, 1]
+    o_ref[...] = _qdq_block(x_ref[...], maxval, zp, fmt, signed)
+
+
+@functools.partial(jax.jit, static_argnames=("exp_bits", "man_bits", "signed",
+                                             "block_rows", "block_cols",
+                                             "interpret"))
+def msfp_qdq_2d(x: jnp.ndarray, maxval: jnp.ndarray, zero_point: jnp.ndarray,
+                *, exp_bits: int, man_bits: int, signed: bool,
+                block_rows: int = 256, block_cols: int = 512,
+                interpret: bool = False) -> jnp.ndarray:
+    """x: (M, N); returns fake-quantized x. Pads to block multiples."""
+    fmt = FPFormat(exp_bits, man_bits, signed)
+    m, n = x.shape
+    bm = min(block_rows, m)
+    bn = min(block_cols, n)
+    pm = (-m) % bm
+    pn = (-n) % bn
+    xp = jnp.pad(x, ((0, pm), (0, pn))) if (pm or pn) else x
+    mz = jnp.stack([jnp.asarray(maxval, jnp.float32),
+                    jnp.asarray(zero_point, jnp.float32)]).reshape(1, 2)
+    out = pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt, signed=signed),
+        grid=(xp.shape[0] // bm, xp.shape[1] // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, mz)
+    return out[:m, :n] if (pm or pn) else out
+
+
+def msfp_qdq(x: jnp.ndarray, qp: QuantizerParams, *,
+             interpret: bool = False) -> jnp.ndarray:
+    """Arbitrary-rank wrapper: flattens to 2D tiles."""
+    shape = x.shape
+    n = shape[-1] if x.ndim > 1 else shape[0]
+    x2 = x.reshape(-1, n)
+    out = msfp_qdq_2d(x2, qp.maxval, qp.zero_point,
+                      exp_bits=qp.exp_bits, man_bits=qp.man_bits,
+                      signed=(qp.kind == KIND_FP_SIGNED), interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,80 @@
+"""Jit'd wrappers around the Pallas kernels with XLA fallbacks.
+
+Dispatch policy: on TPU the Pallas kernels run compiled; on CPU (this
+container) the XLA reference path runs for real numerics, while tests
+exercise the kernels in interpret mode against the ref oracles. Set
+``FORCE=\"pallas\"`` / ``\"xla\"`` / ``\"interpret\"`` to override (tests use it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qmodule import PackedW4
+from repro.kernels import ref as _ref
+from repro.quant.fakequant import QuantizerParams
+
+FORCE: str | None = None
+
+
+def _use_pallas() -> bool:
+    if FORCE == "pallas" or FORCE == "interpret":
+        return True
+    if FORCE == "xla":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return FORCE == "interpret" or jax.default_backend() != "tpu"
+
+
+def msfp_quantize(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
+    """Fused fake-quant (no STE — serving path; training uses quant.ste_qdq)."""
+    if _use_pallas() and qp.kind != 2:
+        from repro.kernels.msfp_quant import msfp_qdq
+        return msfp_qdq(x, qp, interpret=_interpret())
+    return _ref.ref_msfp_qdq(x, qp)
+
+
+def w4_matmul(x: jnp.ndarray, pw: PackedW4) -> jnp.ndarray:
+    """x: (..., K) @ packed W4 (K, N/2-packed) -> (..., N)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    # Pallas kernel supports signed scalar-scale formats; fall back otherwise.
+    if _use_pallas() and pw.signed and jnp.ndim(pw.scale) == 0:
+        from repro.kernels.w4_matmul import w4_matmul_2d
+        out = w4_matmul_2d(x2, pw.packed, pw.scale, exp_bits=pw.exp_bits,
+                           man_bits=pw.man_bits, signed=True,
+                           interpret=_interpret())
+    else:
+        out = _ref.ref_w4_matmul(x2, pw, x.dtype)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def kv4_encode(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """t: (..., hd) -> packed (..., hd/2) uint8 + scale (...,) f16."""
+    lead = t.shape[:-1]
+    hd = t.shape[-1]
+    t2 = t.reshape(-1, hd)
+    if _use_pallas():
+        from repro.kernels.kv4 import kv4_encode_2d
+        packed, scale = kv4_encode_2d(t2, interpret=_interpret())
+    else:
+        packed, scale = _ref.ref_kv4_encode(t2)
+    return packed.reshape(*lead, hd // 2), scale.reshape(lead)
+
+
+def kv4_decode(packed: jnp.ndarray, scale: jnp.ndarray,
+               dtype=jnp.bfloat16) -> jnp.ndarray:
+    lead = packed.shape[:-1]
+    hh = packed.shape[-1]
+    p2 = packed.reshape(-1, hh)
+    s2 = scale.reshape(-1)
+    if _use_pallas():
+        from repro.kernels.kv4 import kv4_decode_2d
+        out = kv4_decode_2d(p2, s2, dtype=dtype, interpret=_interpret())
+    else:
+        out = _ref.ref_kv4_decode(p2, s2, dtype)
+    return out.reshape(*lead, 2 * hh)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.qmodule import PackedW4, decode_codes, unpack_nibbles
+from repro.quant.fakequant import QuantizerParams, apply_qdq
+from repro.quant.formats import FPFormat
+
+KV4_FMT = FPFormat(2, 1, True)  # signed E2M1 for KV-cache values
+
+
+def ref_msfp_qdq(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
+    """Oracle for the fused fake-quant kernel."""
+    return apply_qdq(x, qp)
+
+
+def ref_w4_matmul(x: jnp.ndarray, pw: PackedW4,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Oracle for the packed-W4 matmul kernel: decode then dot."""
+    codes = unpack_nibbles(pw.packed)
+    w = decode_codes(codes, pw.fmt, pw.scale, pw.zero_point, jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(dtype)
+
+
+def ref_kv4_encode(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for FP4 KV-cache encode: per-(…, head) absmax scale, E2M1.
+
+    t: (..., hd) -> packed (..., hd/2) uint8, scale (...,) f16.
+    """
+    from repro.core.qmodule import encode_codes, pack_nibbles
+
+    absmax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-6)
+    codes = encode_codes(t, KV4_FMT, scale[..., None])
+    return pack_nibbles(codes), scale.astype(jnp.float16)
+
+
+def ref_kv4_decode(packed: jnp.ndarray, scale: jnp.ndarray,
+                   dtype=jnp.bfloat16) -> jnp.ndarray:
+    codes = unpack_nibbles(packed)
+    return decode_codes(codes, KV4_FMT, scale.astype(jnp.float32)[..., None],
+                        0.0, dtype)

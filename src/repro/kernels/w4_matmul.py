@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: packed-FP4 weight matmul with in-VMEM dequant.
+
+y = x @ W where W is stored as packed nibbles (split-half layout:
+packed[k, j] holds logical columns j (lo nibble) and j + N/2 (hi)).
+HBM traffic for the weight is the *packed* bytes (K*N/2); nibbles are
+expanded and decoded to bf16 inside VMEM, then fed to the MXU.
+
+Grid: (half, M/bm, (N/2)/bn, K/bk) — the `half` axis selects the nibble
+and addresses the corresponding output column block, so no lane interleave
+is ever needed. K is the innermost (arbitrary) axis accumulating into an
+f32 VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.qmodule import PackedW4
+from repro.quant.formats import FPFormat
+
+
+def _decode_block(codes, fmt: FPFormat, scale):
+    """Nibble codes (already masked to 4 bits) -> f32 values * scale."""
+    man = fmt.man_bits
+    nbits = fmt.exp_bits + fmt.man_bits
+    c = codes.astype(jnp.int32)
+    if fmt.signed:
+        sign = (c >> nbits) & 1
+        c = c & ((1 << nbits) - 1)
+    if fmt.exp_bits == 0:
+        mag = c.astype(jnp.float32) / 2**man
+    else:
+        p = c >> man
+        m = (c & (2**man - 1)).astype(jnp.float32)
+        mag = jnp.where(p == 0, m / 2**man,
+                        jnp.exp2((p - 1).astype(jnp.float32)) * (1 + m / 2**man))
+    val = mag * scale
+    if fmt.signed:
+        val = jnp.where(sign == 1, -val, val)
+    return val
+
+
+def _kernel(x_ref, p_ref, s_ref, o_ref, acc_ref, *, fmt: FPFormat, nk: int):
+    h = pl.program_id(0)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    shift = h * 4
+    codes = (p_ref[...].astype(jnp.int32) >> shift) & 0xF
+    scale = s_ref[0, 0] / fmt.base_max
+    w = _decode_block(codes, fmt, scale).astype(x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[...], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("exp_bits", "man_bits", "signed",
+                                             "bm", "bn", "bk", "interpret"))
+def w4_matmul_2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                 *, exp_bits: int, man_bits: int, signed: bool = True,
+                 bm: int = 128, bn: int = 128, bk: int = 512,
+                 interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K) bf16; packed: (K, N/2) uint8 -> (M, N) x.dtype."""
+    fmt = FPFormat(exp_bits, man_bits, signed)
+    m, k = x.shape
+    k2, n_half = packed.shape
+    assert k == k2, (x.shape, packed.shape)
+    bm = min(bm, m)
+    bn = min(bn, n_half)
+    bk = min(bk, k)
+    pm, pk, pn = (-m) % bm, (-k) % bk, (-n_half) % bn
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        packed = jnp.pad(packed, ((0, pk), (0, pn)))
+    mm, kk = x.shape
+    nh = packed.shape[1]
+    nk = kk // bk
+    sc = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt, nk=nk),
+        grid=(2, mm // bm, nh // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda h, i, j, kb: (i, kb)),
+            pl.BlockSpec((bk, bn), lambda h, i, j, kb: (kb, j)),
+            pl.BlockSpec((1, 1), lambda h, i, j, kb: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn),
+                               lambda h, i, j, kb: (i, h * (nh // bn) + j)),
+        out_shape=jax.ShapeDtypeStruct((mm, 2 * nh), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, packed, sc)
+    return out[:m, : 2 * n_half]

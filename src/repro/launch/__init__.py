@@ -1,0 +1,1 @@
+"""Launch: production meshes, sharding rules, dry-run, train/serve drivers."""

@@ -1,0 +1,193 @@
+"""Step builders + abstract (no-allocation) param/state trees for dry-runs.
+
+``abstract_*`` functions produce ShapeDtypeStruct trees via ``eval_shape``
+so the 1T-param configs lower/compile without a byte of device memory —
+the dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import flatten_paths, unflatten_paths
+from repro.configs.shapes import ShapeSpec
+from repro.core.qmodule import PackedW4, pack_weight
+from repro.models.lm import (LMConfig, cache_specs, decode_step, forward,
+                             init_caches, lm_init, loss_fn)
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
+from repro.quant.search import search_weight_params
+
+# Weights quantized for W4 serving (embed/lm_head stay high precision —
+# the paper's io-layer convention).
+QUANT_WEIGHT_RE = re.compile(
+    r"((wq|wk|wv|wo|gate|up|down|in_proj|out_proj)/w|w_gate|w_up|w_down)$")
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: LMConfig, acfg: AdamConfig, *, grad_accum: int = 1):
+    """Standard train step; ``grad_accum > 1`` scans over microbatches
+
+    (activation memory drops ~k-fold; grads accumulate in f32)."""
+
+    def train_step(params, opt, batch):
+        if grad_accum == 1:
+            def loss(p):
+                return loss_fn(p, cfg, batch["tokens"], batch.get("extra"))
+
+            l, g = jax.value_and_grad(loss)(params)
+        else:
+            def split(t):
+                return t.reshape(grad_accum, t.shape[0] // grad_accum,
+                                 *t.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def body(acc, mb):
+                def loss(p):
+                    return loss_fn(p, cfg, mb["tokens"], mb.get("extra"))
+
+                li, gi = jax.value_and_grad(loss)(params)
+                acc_l, acc_g = acc
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, gi)
+                return (acc_l + li, acc_g), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if cfg.unroll:  # dry-run cost mode: count every microbatch
+                acc = (jnp.float32(0.0), zero_g)
+                for i in range(grad_accum):
+                    acc, _ = body(acc, {k: v[i] for k, v in micro.items()})
+                l, g = acc
+            else:
+                (l, g), _ = jax.lax.scan(body, (jnp.float32(0.0), zero_g),
+                                         micro)
+            l = l / grad_accum
+            g = jax.tree.map(lambda x: x / grad_accum, g)
+        params, opt, m = adam_update(g, opt, params, acfg)
+        return params, opt, {"loss": l, **m}
+
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig):
+    def prefill_step(params, batch):
+        return forward(params, cfg, batch["tokens"], batch.get("extra"))
+
+    return prefill_step
+
+
+def make_decode_fn(cfg: LMConfig):
+    def serve_step(params, caches, token, pos):
+        return decode_step(params, cfg, caches, token, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract trees
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: LMConfig):
+    return jax.eval_shape(lambda: lm_init(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt(aparams, acfg: AdamConfig):
+    return jax.eval_shape(partial(adam_init, cfg=acfg), aparams)
+
+
+def abstract_caches(cfg: LMConfig, batch: int, s_max: int):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, s_max))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def quantize_abstract(aparams) -> Any:
+    """Replace quantizable weights with abstract PackedW4 (W4 serving form).
+
+    Scanned stacks (G, ..., N) get per-layer scales (G, 1, ..., 1)."""
+    flat = flatten_paths(aparams)
+    out = {}
+    for path, leaf in flat.items():
+        if (QUANT_WEIGHT_RE.search(path) and leaf.ndim >= 2
+                and leaf.shape[-1] % 2 == 0):
+            lead = leaf.shape[:-2]
+            scale_shape = tuple([*lead, 1, 1]) if lead else ()
+            out[path] = PackedW4(
+                packed=_sds((*leaf.shape[:-1], leaf.shape[-1] // 2), jnp.uint8),
+                scale=_sds(scale_shape, jnp.float32),
+                zero_point=_sds(scale_shape, jnp.float32),
+                exp_bits=2, man_bits=1, signed=True, shape=tuple(leaf.shape))
+        else:
+            out[path] = leaf
+    return unflatten_paths(out)
+
+
+# ---------------------------------------------------------------------------
+# concrete serving quantization (examples / benchmarks scale)
+# ---------------------------------------------------------------------------
+
+
+def quantize_lm_for_serving(params, bits: int = 4, *, searched: bool = True):
+    """Pack quantizable LM weights to W4 (per-tensor or per-layer scale).
+
+    ``searched=True`` runs the paper's MSE search per weight (Table 6
+    spaces); False uses absmax scales (the cheap deployment default).
+    """
+    flat = flatten_paths(params)
+    out = {}
+    for path, leaf in flat.items():
+        if not (QUANT_WEIGHT_RE.search(path) and hasattr(leaf, "ndim")
+                and leaf.ndim >= 2 and leaf.shape[-1] % 2 == 0):
+            out[path] = leaf
+            continue
+        if leaf.ndim == 2:
+            if searched:
+                qp = search_weight_params(leaf, bits).params
+            else:
+                qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, bits,
+                                     jnp.max(jnp.abs(leaf)).astype(jnp.float32))
+            out[path] = pack_weight(leaf, qp)
+        else:
+            # stacked (G, ..., N): per-slice absmax scale, one packed array
+            red = tuple(range(1, leaf.ndim))
+            mv = jnp.max(jnp.abs(leaf), axis=red, keepdims=True).astype(jnp.float32)
+            qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, bits, mv)
+            out[path] = pack_weight(leaf, qp)
+    return unflatten_paths(out)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins for every model input)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec) -> dict:
+    """Abstract inputs for one dry-run cell."""
+    gb, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": _sds((gb, s), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["extra"] = _sds((gb, cfg.n_img_tokens, cfg.d_vision),
+                                  jnp.bfloat16)
+        return {"batch": batch}
+    # decode: one new token against an s-long cache
+    spec_tree = cache_specs(cfg, gb, s)
+    caches = jax.tree.map(
+        lambda d: _sds(d["shape"], d["dtype"]),
+        spec_tree, is_leaf=lambda d: isinstance(d, dict) and "shape" in d)
+    return {"caches": caches, "token": _sds((gb, 1), jnp.int32),
+            "pos": _sds((), jnp.int32)}

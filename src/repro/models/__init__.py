@@ -1,0 +1,1 @@
+"""Model assemblies: unified LM family + diffusion wrapper + registry."""

@@ -1,0 +1,524 @@
+"""Unified LM-family model: dense / GQA / MoE / SSM / hybrid / audio / vlm.
+
+One config-driven assembly covers all 10 assigned architectures. Layers are
+stacked and scanned (``lax.scan`` over parameter stacks) so HLO size and
+compile time are O(1) in depth — essential for the 80-compile dry-run
+matrix. Heterogeneous depth patterns (gemma3's 5 local : 1 global, zamba2's
+shared attention every k mamba blocks) scan over period-sized groups.
+
+Three entry points per architecture:
+  forward(...)      full-sequence logits (training / prefill)
+  loss_fn(...)      next-token cross-entropy (+ MoE aux loss)
+  decode_step(...)  one token against KV caches / SSM states (serving)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.sharding import DP, MODEL, shard_hint
+from repro.nn.attention import (AttnConfig, attn_apply, attn_decode, attn_init,
+                                init_kv_cache, kv_cache_spec)
+from repro.nn.embeddings import rope_frequencies, timestep_embedding
+from repro.nn.layers import dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+from repro.nn.mlp import mlp_apply, mlp_init
+from repro.nn.moe import MoEConfig, moe_apply, moe_apply_ep, moe_init
+from repro.nn.ssm import (SSMConfig, init_ssm_state, ssm_apply, ssm_decode,
+                          ssm_init, ssm_state_spec)
+
+ATTN, SSM = "attn", "ssm"
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    family: str = "dense"            # dense|moe|ssm|hybrid|audio|vlm
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    mlp_kind: str = "swiglu"         # swiglu | geglu | gelu
+    pos: str = "rope"                # rope | sinusoidal
+    scale_embed: bool = False        # gemma: h *= sqrt(d_model)
+    tie_embeddings: bool = False
+    # depth pattern, period P entries of (kind, window|None, rope_theta)
+    layer_pattern: tuple = ((ATTN, None, 10_000.0),)
+    # --- moe ---
+    moe_impl: str = "global"         # global | ep (shard_map expert parallel)
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared: int = 0
+    first_k_dense: int = 0
+    capacity_factor: float = 1.25
+    # --- ssm ---
+    ssm_d_state: int = 0
+    ssm_headdim: int = 64
+    ssm_n_groups: int = 1
+    ssm_chunk: int = 256
+    # --- hybrid (zamba2) ---
+    shared_attn_every: int = 0       # apply the shared attn block every k layers
+    # --- vlm / audio stubs ---
+    n_img_tokens: int = 0
+    d_vision: int = 0
+    # --- execution ---
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    unroll: bool = False         # dry-run cost mode: Python-loop all scans
+    q_chunk: int = 512
+    kv_dtype: str = "bf16"           # bf16 | fp8 | fp4  (serving KV cache)
+    logits_softcap: float | None = None
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def period(self) -> int:
+        return len(self.layer_pattern)
+
+    def attn_cfg(self, window, theta) -> AttnConfig:
+        return AttnConfig(self.d_model, self.n_heads, self.n_kv, self.hd,
+                          qkv_bias=self.qkv_bias, rope_theta=theta,
+                          window=window, use_rope=(self.pos == "rope"))
+
+    def ssm_cfg(self) -> SSMConfig:
+        return SSMConfig(self.d_model, self.ssm_d_state, self.ssm_headdim,
+                         2, self.ssm_n_groups, 4, self.ssm_chunk)
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(self.d_model, self.moe_d_ff, self.n_experts,
+                         self.top_k, self.n_shared, self.capacity_factor)
+
+    @property
+    def n_scanned(self) -> int:
+        return self.n_layers - self.first_k_dense
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_scanned % self.period == 0, (self.n_scanned, self.period)
+        return self.n_scanned // self.period
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_attn = d * (self.n_heads + 2 * self.n_kv) * self.hd + self.n_heads * self.hd * d
+        if self.mlp_kind in ("swiglu", "geglu"):
+            per_mlp = 3 * d * f
+        else:
+            per_mlp = 2 * d * f
+        per_moe = (self.n_experts * 3 * d * self.moe_d_ff
+                   + self.n_shared * 3 * d * self.moe_d_ff + d * self.n_experts)
+        ssm = self.ssm_cfg()
+        per_ssm = d * (2 * ssm.d_inner + 2 * ssm.n_groups * ssm.d_state + ssm.n_heads) \
+            + ssm.d_inner * d + ssm.conv_dim * 4
+        total = v * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            kind = self.layer_pattern[(max(0, i - self.first_k_dense)) % self.period][0] \
+                if i >= self.first_k_dense else ATTN
+            if kind == SSM:
+                total += per_ssm
+            else:
+                total += per_attn
+                if self.family in ("moe",) and i >= self.first_k_dense:
+                    total += per_moe
+                elif i < self.first_k_dense:
+                    total += 3 * d * (f or 4 * d)
+                elif self.d_ff:
+                    total += per_mlp
+        if self.shared_attn_every:
+            total += per_attn + (per_mlp if self.d_ff else 0)
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k + shared experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        per_moe_all = (self.n_experts * 3 * d * self.moe_d_ff
+                       + self.n_shared * 3 * d * self.moe_d_ff + d * self.n_experts)
+        per_moe_act = ((self.top_k + self.n_shared) * 3 * d * self.moe_d_ff
+                       + d * self.n_experts)
+        n_moe_layers = self.n_layers - self.first_k_dense
+        return self.param_count() - n_moe_layers * (per_moe_all - per_moe_act)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: LMConfig, kind: str, window, theta, *,
+                moe: bool, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    if kind == SSM:
+        return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+                "ssm": ssm_init(ks[0], cfg.ssm_cfg(), dtype)}
+    p = {"ln1": rmsnorm_init(cfg.d_model, dtype),
+         "attn": attn_init(ks[0], cfg.attn_cfg(window, theta), dtype),
+         "ln2": rmsnorm_init(cfg.d_model, dtype)}
+    if moe:
+        p["moe"] = moe_init(ks[1], cfg.moe_cfg(), dtype)
+    elif cfg.d_ff:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    return p
+
+
+def lm_init(key, cfg: LMConfig) -> dict:
+    dtype = cfg.dtype
+    keys = iter(jax.random.split(key, cfg.n_layers + 16))
+    p: dict[str, Any] = {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, cfg.d_model),
+                                   dtype) * 0.02,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(next(keys), cfg.d_model, cfg.vocab, dtype=dtype)
+    if cfg.family == "vlm":
+        p["vision_proj"] = dense_init(next(keys), cfg.d_vision, cfg.d_model,
+                                      bias=True, dtype=dtype)
+    for i in range(cfg.first_k_dense):
+        # leading dense layers (kimi-k2) — un-scanned, standard attn+mlp
+        p[f"dense_{i}"] = {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_init(next(keys), cfg.attn_cfg(*cfg.layer_pattern[0][1:]), dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(next(keys), cfg.d_model,
+                            cfg.d_ff or 4 * cfg.d_model, cfg.mlp_kind, dtype),
+        }
+    # scanned stack: one param tree per group position, stacked over groups
+    per_pos = []
+    for pos_i, (kind, window, theta) in enumerate(cfg.layer_pattern):
+        group_keys = jax.random.split(next(keys), cfg.n_groups)
+        stacked = jax.vmap(
+            lambda k: _block_init(k, cfg, kind, window, theta,
+                                  moe=(cfg.family == "moe"), dtype=dtype)
+        )(group_keys)
+        per_pos.append(stacked)
+    p["blocks"] = per_pos  # list of per-position stacks, each leading dim = n_groups
+    if cfg.shared_attn_every:
+        # Zamba2: one shared transformer block (attn + MLP), reused per group
+        p["shared_attn"] = {
+            "ln": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_init(next(keys), cfg.attn_cfg(None, 10_000.0), dtype),
+        }
+        if cfg.d_ff:
+            p["shared_attn"]["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+            p["shared_attn"]["mlp"] = mlp_init(next(keys), cfg.d_model,
+                                               cfg.d_ff, cfg.mlp_kind, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward blocks
+# ---------------------------------------------------------------------------
+
+
+def _moe_block(bp, x, cfg, *, ctx, site):
+    fn = moe_apply_ep if cfg.moe_impl == "ep" else moe_apply
+    return fn(bp["moe"], x, cfg.moe_cfg(), ctx=ctx, site=site)
+
+
+def _attn_block(bp, h, cos, sin, acfg, cfg, *, ctx, site):
+    x = rmsnorm_apply(bp["ln1"], h)
+    x = attn_apply(bp["attn"], x, cos, sin, acfg, q_chunk=cfg.q_chunk,
+                   unroll=cfg.unroll, ctx=ctx, site=f"{site}/attn")
+    h = h + x
+    if "moe" in bp:
+        x = rmsnorm_apply(bp["ln2"], h)
+        x = _moe_block(bp, x, cfg, ctx=ctx, site=f"{site}/moe")
+        h = h + x
+    elif "mlp" in bp:
+        x = rmsnorm_apply(bp["ln2"], h)
+        x = mlp_apply(bp["mlp"], x, cfg.mlp_kind, ctx=ctx, site=f"{site}/mlp")
+        h = h + x
+    return shard_hint(h, DP, None, None)
+
+
+def _ssm_block(bp, h, cfg, *, ctx, site):
+    x = rmsnorm_apply(bp["ln1"], h)
+    x = ssm_apply(bp["ssm"], x, cfg.ssm_cfg(), unroll=cfg.unroll, ctx=ctx,
+                  site=f"{site}/ssm")
+    return shard_hint(h + x, DP, None, None)
+
+
+def _shared_attn(sp, h, cos, sin, cfg, *, ctx):
+    x = rmsnorm_apply(sp["ln"], h)
+    x = attn_apply(sp["attn"], x, cos, sin, cfg.attn_cfg(None, 10_000.0),
+                   q_chunk=cfg.q_chunk, unroll=cfg.unroll, ctx=ctx,
+                   site="shared_attn")
+    h = h + x
+    if "mlp" in sp:
+        x = rmsnorm_apply(sp["ln2"], h)
+        h = h + mlp_apply(sp["mlp"], x, cfg.mlp_kind, ctx=ctx,
+                          site="shared_attn/mlp")
+    return h
+
+
+def _rope_tables(cfg: LMConfig, s: int, dtype):
+    tables = {}
+    for kind, window, theta in cfg.layer_pattern:
+        if kind == ATTN and theta not in tables:
+            tables[theta] = rope_frequencies(cfg.hd, s, theta, dtype)
+    if cfg.first_k_dense or cfg.shared_attn_every:
+        theta = cfg.layer_pattern[0][2] if cfg.layer_pattern[0][0] == ATTN else 10_000.0
+        if theta not in tables:
+            tables[theta] = rope_frequencies(cfg.hd, s, theta, dtype)
+    if not tables:
+        tables[10_000.0] = (None, None)
+    return tables
+
+
+def _embed_tokens(p, cfg: LMConfig, tokens, extra):
+    h = jnp.take(p["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.scale_embed:
+        h = h * jnp.asarray(jnp.sqrt(cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm" and extra is not None:
+        img = dense_apply(p["vision_proj"], extra.astype(cfg.dtype))
+        h = lax.dynamic_update_slice_in_dim(h, img, 0, axis=1)
+    if cfg.pos == "sinusoidal":
+        pos = timestep_embedding(jnp.arange(h.shape[1]), cfg.d_model)
+        h = h + pos[None].astype(cfg.dtype)
+    return shard_hint(h, DP, None, None)
+
+
+def forward(p: dict, cfg: LMConfig, tokens: jnp.ndarray,
+            extra: jnp.ndarray | None = None, ctx=None) -> jnp.ndarray:
+    """Full-sequence logits: tokens (B, S) [+ extra (B, n_img, d_vision)]."""
+    b, s = tokens.shape
+    h = _embed_tokens(p, cfg, tokens, extra)
+    tables = _rope_tables(cfg, s, jnp.float32)
+
+    for i in range(cfg.first_k_dense):
+        kind, window, theta = cfg.layer_pattern[0]
+        cos, sin = tables[theta]
+        h = _attn_block(p[f"dense_{i}"], h, cos, sin,
+                        cfg.attn_cfg(window, theta), cfg, ctx=ctx,
+                        site="dense_block")
+
+    group_idx = {"i": 0}
+
+    def group_body(h, group_params):
+        for pos_i, (kind, window, theta) in enumerate(cfg.layer_pattern):
+            bp = group_params[pos_i]
+            site = f"block_p{pos_i}"
+            if kind == SSM:
+                h = _ssm_block(bp, h, cfg, ctx=ctx, site=site)
+            else:
+                cos, sin = tables[theta]
+                h = _attn_block(bp, h, cos, sin, cfg.attn_cfg(window, theta),
+                                cfg, ctx=ctx, site=site)
+        if cfg.shared_attn_every:
+            cos, sin = tables[list(tables)[0]]
+            h = _shared_attn(p["shared_attn"], h, cos, sin, cfg, ctx=ctx)
+        return h
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_fn(h, group_params):
+        return body(h, group_params), None
+
+    if cfg.unroll:  # exact-cost dry-run path: no while loops in HLO
+        for gi in range(cfg.n_groups):
+            h = body(h, jax.tree.map(lambda x: x[gi], p["blocks"]))
+    else:
+        h, _ = lax.scan(scan_fn, h, p["blocks"])
+    h = rmsnorm_apply(p["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = h @ p["embed"].T.astype(h.dtype)
+    else:
+        logits = dense_apply(p["lm_head"], h, ctx=ctx, site="lm_head")
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return shard_hint(logits, DP, None, MODEL)
+
+
+def loss_fn(p: dict, cfg: LMConfig, tokens: jnp.ndarray,
+            extra: jnp.ndarray | None = None, ctx=None) -> jnp.ndarray:
+    """Next-token cross-entropy (mean over tokens)."""
+    logits = forward(p, cfg, tokens, extra, ctx=ctx)
+    targets = tokens[:, 1:]
+    # lse - label_logit form, with the label pick as a one-hot reduction:
+    # both reduce over the vocab-sharded axis without gathers/all-gathers
+    # (take_along_axis over a sharded dim would force a full all-gather).
+    lg = logits[:, :-1].astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    vocab_iota = jnp.arange(lg.shape[-1], dtype=targets.dtype)
+    onehot = (targets[..., None] == vocab_iota).astype(lg.dtype)
+    lab = jnp.sum(lg * onehot, axis=-1)
+    return (lse - lab).mean()
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: LMConfig, batch: int, s_max: int) -> dict:
+    """ShapeDtypeStruct-compatible cache description for input_specs()."""
+    specs: dict[str, Any] = {"blocks": []}
+    for kind, window, theta in cfg.layer_pattern:
+        if kind == SSM:
+            per = ssm_state_spec(batch, cfg.ssm_cfg())
+        else:
+            s_eff = min(s_max, window) if window else s_max
+            per = kv_cache_spec(batch, s_eff, cfg.attn_cfg(window, theta),
+                                cfg.kv_dtype)
+        # stacked over groups
+        specs["blocks"].append({
+            k: dict(shape=(cfg.n_groups, *v["shape"]), dtype=v["dtype"])
+            for k, v in per.items()})
+    for i in range(cfg.first_k_dense):
+        specs[f"dense_{i}"] = kv_cache_spec(
+            batch, s_max, cfg.attn_cfg(*cfg.layer_pattern[0][1:]), cfg.kv_dtype)
+    if cfg.shared_attn_every:
+        # Zamba2 shares the attention *weights*, not the caches: one KV
+        # cache per group invocation, stacked like the scanned blocks.
+        per = kv_cache_spec(batch, s_max, cfg.attn_cfg(None, 10_000.0),
+                            cfg.kv_dtype)
+        specs["shared"] = {k: dict(shape=(cfg.n_groups, *v["shape"]),
+                                   dtype=v["dtype"]) for k, v in per.items()}
+    return specs
+
+
+def init_caches(cfg: LMConfig, batch: int, s_max: int) -> dict:
+    def make(spec):
+        if isinstance(spec, dict) and "shape" in spec:
+            return jnp.zeros(spec["shape"], spec["dtype"])
+        if isinstance(spec, dict):
+            return {k: make(v) for k, v in spec.items()}
+        return [make(s) for s in spec]
+
+    return make(cache_specs(cfg, batch, s_max))
+
+
+def decode_step(p: dict, cfg: LMConfig, caches: dict, token: jnp.ndarray,
+                pos: jnp.ndarray, ctx=None) -> tuple[jnp.ndarray, dict]:
+    """One decode step. token: (B, 1) ids; pos: scalar int32 position.
+
+    Returns (logits (B, 1, vocab), updated caches).
+    """
+    h = jnp.take(p["embed"], token, axis=0).astype(cfg.dtype)
+    if cfg.scale_embed:
+        h = h * jnp.asarray(jnp.sqrt(cfg.d_model), cfg.dtype)
+    if cfg.pos == "sinusoidal":
+        h = h + timestep_embedding(pos[None].astype(jnp.float32),
+                                   cfg.d_model)[None].astype(cfg.dtype)
+    h = shard_hint(h, DP, None, None)
+
+    def rot(theta):
+        inv = 1.0 / (theta ** (jnp.arange(0, cfg.hd, 2, dtype=jnp.float32) / cfg.hd))
+        ang = pos.astype(jnp.float32) * inv
+        return jnp.cos(ang)[None], jnp.sin(ang)[None]
+
+    new_caches = dict(caches)
+    for i in range(cfg.first_k_dense):
+        kind, window, theta = cfg.layer_pattern[0]
+        cos_t, sin_t = rot(theta)
+        bp = p[f"dense_{i}"]
+        x = rmsnorm_apply(bp["ln1"], h)
+        x, c = attn_decode(bp["attn"], x, caches[f"dense_{i}"], pos, pos + 1,
+                           cos_t, sin_t, cfg.attn_cfg(window, theta),
+                           kv_dtype=cfg.kv_dtype, ctx=ctx, site="dense_block/attn")
+        new_caches[f"dense_{i}"] = c
+        h = h + x
+        x = rmsnorm_apply(bp["ln2"], h)
+        h = h + mlp_apply(bp["mlp"], x, cfg.mlp_kind, ctx=ctx,
+                          site="dense_block/mlp")
+
+    def group_body(h, xs):
+        if cfg.shared_attn_every:
+            group_params, group_caches, shared_cache = xs
+        else:
+            group_params, group_caches = xs
+            shared_cache = None
+        out_caches = []
+        for pos_i, (kind, window, theta) in enumerate(cfg.layer_pattern):
+            bp = group_params[pos_i]
+            cache = group_caches[pos_i]
+            site = f"block_p{pos_i}"
+            if kind == SSM:
+                x = rmsnorm_apply(bp["ln1"], h)
+                x, c = ssm_decode(bp["ssm"], x, cache, cfg.ssm_cfg(), ctx=ctx,
+                                  site=f"{site}/ssm")
+                h = h + x
+            else:
+                acfg = cfg.attn_cfg(window, theta)
+                # windowed layers keep a ring cache of size `window`
+                if window:
+                    store_pos = pos % window
+                    valid_len = jnp.minimum(pos + 1, window)
+                else:
+                    store_pos, valid_len = pos, pos + 1
+                cos_t, sin_t = rot(theta)
+                x = rmsnorm_apply(bp["ln1"], h)
+                x, c = attn_decode(bp["attn"], x, cache, store_pos, valid_len,
+                                   cos_t, sin_t,
+                                   dataclasses.replace(acfg, window=None)
+                                   if window else acfg,
+                                   kv_dtype=cfg.kv_dtype, ctx=ctx,
+                                   site=f"{site}/attn")
+                h = h + x
+                if "moe" in bp:
+                    x = rmsnorm_apply(bp["ln2"], h)
+                    h = h + _moe_block(bp, x, cfg, ctx=ctx,
+                                       site=f"{site}/moe")
+                elif "mlp" in bp:
+                    x = rmsnorm_apply(bp["ln2"], h)
+                    h = h + mlp_apply(bp["mlp"], x, cfg.mlp_kind, ctx=ctx,
+                                      site=f"{site}/mlp")
+            out_caches.append(c)
+        if cfg.shared_attn_every:
+            # Zamba2: shared *weights*, per-group KV cache (threaded as xs/ys)
+            cos_t, sin_t = rot(10_000.0)
+            sp = p["shared_attn"]
+            x = rmsnorm_apply(sp["ln"], h)
+            x, shared_cache = attn_decode(
+                sp["attn"], x, shared_cache, pos, pos + 1, cos_t, sin_t,
+                cfg.attn_cfg(None, 10_000.0), kv_dtype=cfg.kv_dtype, ctx=ctx,
+                site="shared_attn")
+            h = h + x
+            if "mlp" in sp:
+                x = rmsnorm_apply(sp["ln2"], h)
+                h = h + mlp_apply(sp["mlp"], x, cfg.mlp_kind, ctx=ctx,
+                                  site="shared_attn/mlp")
+            return h, (out_caches, shared_cache)
+        return h, (out_caches, None)
+
+    if cfg.shared_attn_every:
+        xs = (p["blocks"], caches["blocks"], caches["shared"])
+    else:
+        xs = (p["blocks"], caches["blocks"])
+    if cfg.unroll:  # exact-cost dry-run path
+        ys = []
+        for gi in range(cfg.n_groups):
+            h, y = group_body(h, jax.tree.map(lambda x: x[gi], xs))
+            ys.append(y)
+        blk_caches, shared_caches = jax.tree.map(
+            lambda *ls: jnp.stack(ls), *ys)
+    else:
+        h, (blk_caches, shared_caches) = lax.scan(group_body, h, xs)
+    new_caches["blocks"] = blk_caches
+    if cfg.shared_attn_every:
+        new_caches["shared"] = shared_caches
+
+    h = rmsnorm_apply(p["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = h @ p["embed"].T.astype(h.dtype)
+    else:
+        logits = dense_apply(p["lm_head"], h, ctx=ctx, site="lm_head")
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return shard_hint(logits, DP, None, MODEL), new_caches

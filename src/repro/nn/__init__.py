@@ -1,0 +1,1 @@
+"""NN substrate: layers, attention, MLPs, SSM, MoE, UNet, embeddings."""

@@ -1,0 +1,202 @@
+"""GQA attention: RoPE, sliding window, q-chunked prefill, KV-cache decode.
+
+Prefill/train computes attention in query chunks (``lax.scan`` over chunk
+index) so the logits tensor never materializes at (S, S) — per-device peak
+is (B, H_local, q_chunk, S). Heads shard on the ``model`` mesh axis,
+sequence/batch on ``data``.
+
+Decode attends one new token against a preallocated KV cache; the cache
+dtype is configurable (bf16 / fp8-e4m3 / packed FP4 with per-token-head
+scales — the MSFP-style cache compression evaluated in EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn.embeddings import apply_rope
+from repro.nn.layers import dense_apply, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    window: int | None = None      # sliding-window size; None = global
+    softcap: float | None = None
+    use_rope: bool = True
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.head_dim,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv * cfg.head_dim,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv * cfg.head_dim,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.head_dim, cfg.d_model,
+                         dtype=dtype),
+    }
+
+
+def _qkv(p, x, cfg: AttnConfig, cos, sin, pos_offset=0, *, ctx=None, site=None):
+    b, s, _ = x.shape
+    g = cfg.n_heads // cfg.n_kv
+    q = dense_apply(p["wq"], x, ctx=ctx, site=f"{site}/wq")
+    k = dense_apply(p["wk"], x, ctx=ctx, site=f"{site}/wk")
+    v = dense_apply(p["wv"], x, ctx=ctx, site=f"{site}/wv")
+    q = q.reshape(b, s, cfg.n_kv, g, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv, cfg.head_dim)
+    if cfg.use_rope and cos is not None:
+        qr = q.reshape(b, s, cfg.n_kv * g, cfg.head_dim)
+        qr = apply_rope(qr, cos, sin)
+        q = qr.reshape(b, s, cfg.n_kv, g, cfg.head_dim)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, window):
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def attn_apply(p: dict, x: jnp.ndarray, cos, sin, cfg: AttnConfig, *,
+               q_chunk: int = 512, unroll: bool = False, ctx=None,
+               site: str | None = None) -> jnp.ndarray:
+    """Causal (optionally windowed) self-attention over a full sequence."""
+    b, s, _ = x.shape
+    g = cfg.n_heads // cfg.n_kv
+    q, k, v = _qkv(p, x, cfg, cos, sin, ctx=ctx, site=site)
+    scale = cfg.head_dim ** -0.5
+    qc = min(q_chunk, s)
+    assert s % qc == 0, (s, qc)
+    nc = s // qc
+    q = q.reshape(b, nc, qc, cfg.n_kv, g, cfg.head_dim)
+    k_pos = jnp.arange(s)
+
+    def one_chunk(ci):
+        qi = q[:, ci]  # (b, qc, K, G, hd)
+        logits = jnp.einsum("bqkgh,bskh->bkgqs", qi, k,
+                            preferred_element_type=jnp.float32) * scale
+        if cfg.softcap:
+            logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+        q_pos = ci * qc + jnp.arange(qc)
+        m = _mask(q_pos, k_pos, cfg.window)
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+        return o.reshape(b, qc, cfg.n_heads * cfg.head_dim)
+
+    if unroll:  # exact-cost dry-run path: same math, no while loop
+        out = jnp.stack([one_chunk(jnp.int32(ci)) for ci in range(nc)])
+    else:
+        out = lax.map(one_chunk, jnp.arange(nc))      # (nc, b, qc, D)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return dense_apply(p["wo"], out, ctx=ctx, site=f"{site}/wo")
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+KV_DTYPES = ("bf16", "fp8", "fp4")
+
+
+def kv_cache_spec(batch: int, s_max: int, cfg: AttnConfig, kv_dtype: str = "bf16"):
+    """Shape/dtype spec for one layer's cache (used by input_specs)."""
+    if kv_dtype == "bf16":
+        kv = dict(shape=(batch, s_max, cfg.n_kv, cfg.head_dim), dtype=jnp.bfloat16)
+        return {"k": kv, "v": kv}
+    if kv_dtype == "fp8":
+        kv = dict(shape=(batch, s_max, cfg.n_kv, cfg.head_dim),
+                  dtype=jnp.float8_e4m3fn)
+        return {"k": kv, "v": kv}
+    if kv_dtype == "fp4":
+        kv = dict(shape=(batch, s_max, cfg.n_kv, cfg.head_dim // 2), dtype=jnp.uint8)
+        sc = dict(shape=(batch, s_max, cfg.n_kv), dtype=jnp.float16)
+        return {"k": kv, "v": kv, "k_scale": sc, "v_scale": sc}
+    raise ValueError(kv_dtype)
+
+
+def init_kv_cache(batch, s_max, cfg: AttnConfig, kv_dtype="bf16"):
+    spec = kv_cache_spec(batch, s_max, cfg, kv_dtype)
+    return {k: jnp.zeros(v["shape"], v["dtype"]) for k, v in spec.items()}
+
+
+def _kv_store(cache: dict, k_new, v_new, pos, kv_dtype: str):
+    """Write one position (B, 1, K, hd) into the cache at ``pos``."""
+    if kv_dtype == "bf16":
+        k_new, v_new = k_new.astype(jnp.bfloat16), v_new.astype(jnp.bfloat16)
+        return {
+            "k": lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1),
+            "v": lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1),
+        }
+    if kv_dtype == "fp8":
+        return {
+            "k": lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(jnp.float8_e4m3fn), pos, axis=1),
+            "v": lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(jnp.float8_e4m3fn), pos, axis=1),
+        }
+    # fp4: signed E2M1 with per-(token, kv-head) scale (MSFP-style).
+    from repro.kernels import ops
+    out = dict(cache)
+    for name, t in (("k", k_new), ("v", v_new)):
+        packed, scale = ops.kv4_encode(t)
+        out[name] = lax.dynamic_update_slice_in_dim(cache[name], packed, pos, axis=1)
+        out[f"{name}_scale"] = lax.dynamic_update_slice_in_dim(
+            cache[f"{name}_scale"], scale, pos, axis=1)
+    return out
+
+
+def _kv_load(cache: dict, kv_dtype: str, dtype=jnp.bfloat16):
+    if kv_dtype in ("bf16", "fp8"):
+        return cache["k"].astype(dtype), cache["v"].astype(dtype)
+    from repro.kernels import ops
+    k = ops.kv4_decode(cache["k"], cache["k_scale"], dtype)
+    v = ops.kv4_decode(cache["v"], cache["v_scale"], dtype)
+    return k, v
+
+
+def attn_decode(p: dict, x: jnp.ndarray, cache: dict, store_pos, valid_len,
+                cos_t, sin_t, cfg: AttnConfig, *, kv_dtype: str = "bf16",
+                ctx=None, site: str | None = None) -> tuple[jnp.ndarray, dict]:
+    """One-token decode. x: (B, 1, D).
+
+    ``store_pos``: cache slot for the new token (ring index for windowed
+    layers, absolute position otherwise). ``valid_len``: number of valid
+    cache slots to attend over (= min(pos+1, window or s_max)); ring slots
+    hold the most recent ``window`` tokens with their absolute RoPE applied
+    at store time, so relative rotation stays correct after wraparound.
+    cos_t/sin_t: (1, hd/2) rotation for the *absolute* position.
+    """
+    b = x.shape[0]
+    g = cfg.n_heads // cfg.n_kv
+    q, k, v = _qkv(p, x, cfg, cos_t, sin_t, ctx=ctx, site=site)
+    cache = _kv_store(cache, k, v, store_pos, kv_dtype)
+    keys, vals = _kv_load(cache, kv_dtype, x.dtype)
+    s_max = keys.shape[1]
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, keys,
+                        preferred_element_type=jnp.float32) * scale
+    if cfg.softcap:
+        logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+    valid = jnp.arange(s_max) < valid_len
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(vals.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, vals)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return dense_apply(p["wo"], o, ctx=ctx, site=f"{site}/wo"), cache

@@ -1,0 +1,37 @@
+"""Embedding utilities shared by the UNet, the TALoRA router, and LMs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def timestep_embedding(t: jnp.ndarray, dim: int,
+                       max_period: float = 10_000.0) -> jnp.ndarray:
+    """DDPM sinusoidal timestep embedding. t: (...,) int/float -> (..., dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[..., None] * freqs
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, [(0, 0)] * (emb.ndim - 1) + [(0, 1)])
+    return emb
+
+
+def rope_frequencies(head_dim: int, max_seq: int, theta: float = 10_000.0,
+                     dtype=jnp.float32) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Precomputed RoPE cos/sin tables: (max_seq, head_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    pos = jnp.arange(max_seq, dtype=jnp.float32)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs. x: (..., S, H, D); cos/sin: (S, D//2) or (..., S, D//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:  # (S, D/2) -> broadcast over batch and heads
+        cos = cos[:, None, :]
+        sin = sin[:, None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)

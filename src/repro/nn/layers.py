@@ -1,0 +1,171 @@
+"""Functional NN layers with explicit param dicts and quantization hooks.
+
+Every layer is an (init, apply) pair over plain dicts — no module framework,
+so params are trivially shardable / checkpointable / scannable.
+
+Quantization integrates via two hooks threaded through ``apply``:
+  * ``ctx``  — a ``repro.quant.QuantContext``: ``ctx.act(site, x)`` observes
+    or fake-quantizes the layer input (site = '/'-joined param path).
+  * weights — a dense array (possibly already fake-quantized), or a
+    ``PackedW4`` (serving form), dispatched here.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.qmodule import PackedW4, w4_dense_xla
+from repro.quant.calibrate import QuantContext, OFF
+
+
+def _maybe_quant_act(ctx: QuantContext | None, site: str | None, x):
+    if ctx is None or site is None:
+        return x
+    return ctx.act(site, x)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None) -> dict:
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: dict, x: jnp.ndarray, *, ctx: QuantContext | None = None,
+                site: str | None = None) -> jnp.ndarray:
+    x = _maybe_quant_act(ctx, site, x)
+    w = p["w"]
+    if isinstance(w, PackedW4):
+        from repro.kernels import ops  # late import; kernels depend on nn types
+        y = ops.w4_matmul(x, w)
+    else:
+        y = x @ w.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Conv2D (NHWC, HWIO) — the UNet's workhorse
+# ---------------------------------------------------------------------------
+
+
+def conv2d_init(key, c_in: int, c_out: int, kernel: int = 3, *,
+                bias: bool = True, dtype=jnp.float32,
+                scale: float | None = None) -> dict:
+    fan_in = c_in * kernel * kernel
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    p = {"w": jax.random.normal(key, (kernel, kernel, c_in, c_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv2d_apply(p: dict, x: jnp.ndarray, *, stride: int = 1,
+                 padding: str | Sequence = "SAME",
+                 ctx: QuantContext | None = None,
+                 site: str | None = None) -> jnp.ndarray:
+    x = _maybe_quant_act(ctx, site, x)
+    w = p["w"]
+    if isinstance(w, PackedW4):
+        from repro.core.qmodule import dequant_weight
+        w = dequant_weight(w, x.dtype)
+    y = lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p: dict, x: jnp.ndarray, *, eps: float = 1e-6,
+                  plus_one: bool = False) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    n = xf * lax.rsqrt(var + eps)
+    g = p["g"].astype(jnp.float32)
+    g = g + 1.0 if plus_one else g  # gemma convention stores g-1
+    return (n * g).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p: dict, x: jnp.ndarray, *, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    n = (xf - mu) * lax.rsqrt(var + eps)
+    return (n * p["g"].astype(jnp.float32)
+            + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def groupnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def groupnorm_apply(p: dict, x: jnp.ndarray, *, groups: int = 32,
+                    eps: float = 1e-5) -> jnp.ndarray:
+    """NHWC group norm."""
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xf = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = xf.mean(axis=(1, 2, 4), keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=(1, 2, 4), keepdims=True)
+    n = ((xf - mu) * lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return (n * p["g"] + p["b"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> dict:
+    return {"table": jax.random.normal(key, (vocab, dim), dtype) * 0.02}
+
+
+def embed_apply(p: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def embed_attend(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied-readout logits: x @ table.T."""
+    return x @ p["table"].T.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+ACTIVATIONS = {
+    "silu": silu,
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}

@@ -1,0 +1,59 @@
+"""Transformer MLPs: SwiGLU / GeGLU / plain-GELU, with quantization sites.
+
+The gated variants are where the paper's AALs live in LM-family models: the
+``down`` projection consumes ``act(gate) * up`` whose distribution carries
+the SiLU/GELU negative-tail compression (min ≈ -0.278 for SiLU, ≈ -0.17 for
+GELU) — exactly Fig. 1(b) of the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import ACTIVATIONS, dense_apply, dense_init
+
+
+def glu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def glu_mlp_apply(p: dict, x: jnp.ndarray, *, act: str = "silu",
+                  ctx=None, site: str | None = None) -> jnp.ndarray:
+    fn = ACTIVATIONS[act]
+    g = dense_apply(p["gate"], x, ctx=ctx, site=f"{site}/gate")
+    u = dense_apply(p["up"], x, ctx=ctx, site=f"{site}/up")
+    return dense_apply(p["down"], fn(g) * u, ctx=ctx, site=f"{site}/down")
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "up": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "down": dense_init(k2, d_ff, d_model, dtype=dtype),
+    }
+
+
+def gelu_mlp_apply(p: dict, x: jnp.ndarray, *, act: str = "gelu",
+                   ctx=None, site: str | None = None) -> jnp.ndarray:
+    fn = ACTIVATIONS[act]
+    h = fn(dense_apply(p["up"], x, ctx=ctx, site=f"{site}/up"))
+    return dense_apply(p["down"], h, ctx=ctx, site=f"{site}/down")
+
+
+def mlp_init(key, d_model, d_ff, kind: str, dtype=jnp.float32) -> dict:
+    if kind in ("swiglu", "geglu"):
+        return glu_mlp_init(key, d_model, d_ff, dtype)
+    return gelu_mlp_init(key, d_model, d_ff, dtype)
+
+
+def mlp_apply(p, x, kind: str, *, ctx=None, site=None):
+    if kind == "swiglu":
+        return glu_mlp_apply(p, x, act="silu", ctx=ctx, site=site)
+    if kind == "geglu":
+        return glu_mlp_apply(p, x, act="gelu_tanh", ctx=ctx, site=site)
+    return gelu_mlp_apply(p, x, ctx=ctx, site=site)

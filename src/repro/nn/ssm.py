@@ -1,0 +1,203 @@
+"""Mamba2 block — SSD (state-space duality) with chunked scan.
+
+Follows the minimal-SSD algorithm of arXiv:2405.21060 §6 but runs a
+``lax.scan`` over chunks (carrying the inter-chunk SSM state) so the
+(h, s, s) intra-chunk kernel only ever materializes for one chunk — the
+TPU-friendly shape: matmul-dominated within chunks, O(1) memory across.
+
+Decode is the dual recurrence: state' = exp(dt*A) * state + dt * B ⊗ x.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.nn.layers import dense_apply, dense_init, rmsnorm_apply, rmsnorm_init, silu
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssm_init(key, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.d_conv, cfg.conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads).astype(dtype)),
+        "dt_bias": jnp.zeros((cfg.n_heads,), dtype),
+        "D": jnp.ones((cfg.n_heads,), dtype),
+        "norm": rmsnorm_init(cfg.d_inner, dtype),
+        "out_proj": dense_init(ks[2], cfg.d_inner, cfg.d_model, dtype=dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: SSMConfig):
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + cfg.conv_dim]
+    dt = zxbcdt[..., di + cfg.conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over sequence. xbc: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return silu(out + b)
+
+
+def _segsum(a):
+    """(..., s) -> (..., s, s) lower-tri segment sums: sum of a[j+1..i]."""
+    s = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum over (j, i]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt_a, b_mat, c_mat, chunk: int, init_state=None,
+             unroll: bool = False):
+    """Chunked SSD. x: (B,S,H,P) (already dt-scaled), dt_a: (B,S,H) log-decay,
+    b_mat/c_mat: (B,S,H,N) (groups pre-broadcast to heads).
+    Returns y: (B,S,H,P), final state (B,H,P,N)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def to_chunks(t):
+        # (B, S, ...) -> (nc, B, chunk, ...): scan iterates the leading axis.
+        return jnp.swapaxes(t.reshape(bsz, nc, chunk, *t.shape[2:]), 0, 1)
+
+    xc, ac, bc, cc = map(to_chunks, (x, dt_a, b_mat, c_mat))
+    state0 = (jnp.zeros((bsz, h, p, n), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xk, ak, bk, ck = inp                          # (B,chunk,H,*)
+        a_t = jnp.moveaxis(ak, -1, 1).astype(jnp.float32)  # (B,H,chunk)
+        cum = jnp.cumsum(a_t, axis=-1)
+        li = jnp.exp(_segsum(a_t))                    # (B,H,s,s)
+        y_diag = jnp.einsum("blhn,bshn,bhls,bshp->blhp", ck, bk,
+                            li.astype(ck.dtype), xk)
+        decay_states = jnp.exp(cum[..., -1:] - cum)   # (B,H,s)
+        chunk_state = jnp.einsum("bshn,bhs,bshp->bhpn", bk,
+                                 decay_states.astype(bk.dtype), xk)
+        out_decay = jnp.exp(cum).astype(ck.dtype)     # (B,H,s)
+        y_off = jnp.einsum("blhn,bhpn,bhl->blhp", ck,
+                           state.astype(ck.dtype), out_decay)
+        new_state = (jnp.exp(cum[..., -1])[..., None, None] * state
+                     + chunk_state.astype(jnp.float32))
+        return new_state, y_diag + y_off
+
+    if unroll:  # exact-cost dry-run path
+        state, ys_l = state0, []
+        for i in range(nc):
+            state, yi = step(state, (xc[i], ac[i], bc[i], cc[i]))
+            ys_l.append(yi)
+        final, ys = state, jnp.stack(ys_l)
+    else:
+        final, ys = lax.scan(step, state0, (xc, ac, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    return y, final
+
+
+def ssm_apply(p: dict, x: jnp.ndarray, cfg: SSMConfig, *, ctx=None,
+              unroll: bool = False, site: str | None = None) -> jnp.ndarray:
+    """Full-sequence Mamba2 block. x: (B,S,D) -> (B,S,D)."""
+    bsz, s, _ = x.shape
+    zxbcdt = dense_apply(p["in_proj"], x, ctx=ctx, site=f"{site}/in_proj")
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    xs = xbc[..., :di].reshape(bsz, s, h, cfg.headdim)
+    b_mat = xbc[..., di:di + g * n].reshape(bsz, s, g, n)
+    c_mat = xbc[..., di + g * n:].reshape(bsz, s, g, n)
+    rep = h // g
+    b_mat = jnp.repeat(b_mat, rep, axis=2)
+    c_mat = jnp.repeat(c_mat, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (H,)
+    y, _ = ssd_scan(xs * dt[..., None].astype(xs.dtype), dt * a,
+                    b_mat, c_mat, cfg.chunk, unroll=unroll)
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(bsz, s, di) * silu(z)
+    y = rmsnorm_apply(p["norm"], y)
+    return dense_apply(p["out_proj"], y, ctx=ctx, site=f"{site}/out_proj")
+
+
+# ---------------------------------------------------------------------------
+# Decode: recurrent state + rolling conv buffer
+# ---------------------------------------------------------------------------
+
+
+def ssm_state_spec(batch: int, cfg: SSMConfig):
+    return {
+        "state": dict(shape=(batch, cfg.n_heads, cfg.headdim, cfg.d_state),
+                      dtype=jnp.float32),
+        "conv": dict(shape=(batch, cfg.d_conv - 1, cfg.conv_dim),
+                     dtype=jnp.bfloat16),
+    }
+
+
+def init_ssm_state(batch: int, cfg: SSMConfig):
+    return {k: jnp.zeros(v["shape"], v["dtype"])
+            for k, v in ssm_state_spec(batch, cfg).items()}
+
+
+def ssm_decode(p: dict, x: jnp.ndarray, cache: dict, cfg: SSMConfig, *,
+               ctx=None, site: str | None = None):
+    """One-token decode. x: (B,1,D) -> (B,1,D), updated cache."""
+    bsz = x.shape[0]
+    zxbcdt = dense_apply(p["in_proj"], x[:, 0], ctx=ctx, site=f"{site}/in_proj")
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    # Rolling causal conv: window = [conv buffer ; xbc]
+    win = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc[:, None]], axis=1)
+    conv_out = silu(jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(xbc.dtype))
+                    + p["conv_b"].astype(xbc.dtype))
+    new_conv = win[:, 1:].astype(jnp.bfloat16)
+    di, g, n, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    xs = conv_out[..., :di].reshape(bsz, h, cfg.headdim)
+    b_mat = conv_out[..., di:di + g * n].reshape(bsz, g, n)
+    c_mat = conv_out[..., di + g * n:].reshape(bsz, g, n)
+    rep = h // g
+    b_mat = jnp.repeat(b_mat, rep, axis=1)                        # (B,H,N)
+    c_mat = jnp.repeat(c_mat, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)[..., None, None]                      # (B,H,1,1)
+    incr = jnp.einsum("bhp,bhn->bhpn", (xs * dt[..., None].astype(xs.dtype)),
+                      b_mat).astype(jnp.float32)
+    state = cache["state"] * decay + incr
+    y = jnp.einsum("bhpn,bhn->bhp", state.astype(xs.dtype), c_mat)
+    y = y + xs * p["D"][None, :, None].astype(xs.dtype)
+    y = y.reshape(bsz, di) * silu(z)
+    y = rmsnorm_apply(p["norm"], y)
+    out = dense_apply(p["out_proj"], y, ctx=ctx, site=f"{site}/out_proj")
+    return out[:, None], {"state": state, "conv": new_conv}

@@ -1,0 +1,109 @@
+"""Adam/AdamW in pure JAX: dtype-configurable moments, clipping, schedules.
+
+No optax on-box; this is the real optimizer used by the trainer and the
+TALoRA fine-tune loop. Moments dtype matters at scale: kimi-k2 (1T params)
+only fits a v5e pod-pair with bf16 moments (see EXPERIMENTS §Roofline), so
+``moment_dtype`` is a first-class config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float | None = 1.0
+    moment_dtype: Any = jnp.float32
+    schedule: str = "constant"     # constant | cosine | linear_warmup_cosine
+    warmup_steps: int = 0
+    total_steps: int = 10_000
+
+
+def lr_at(cfg: AdamConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    lr = jnp.float32(cfg.lr)
+    if cfg.schedule == "constant":
+        return lr
+    warm = jnp.minimum(1.0, s / jnp.maximum(cfg.warmup_steps, 1))
+    if cfg.schedule == "linear_warmup_cosine" or cfg.schedule == "cosine":
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * warm * cos
+    raise ValueError(cfg.schedule)
+
+
+def adam_init(params: Any, cfg: AdamConfig) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adam_update(grads: Any, state: dict, params: Any,
+                cfg: AdamConfig) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    lr = lr_at(cfg, step)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - delta).astype(p.dtype),
+                m_new.astype(cfg.moment_dtype), v_new.astype(cfg.moment_dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+@dataclasses.dataclass
+class EMA:
+    """Exponential moving average of params (diffusion training standard)."""
+    decay: float = 0.999
+
+    def init(self, params):
+        return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+    def update(self, ema, params):
+        d = self.decay
+        return jax.tree.map(
+            lambda e, p: d * e + (1 - d) * p.astype(jnp.float32), ema, params)

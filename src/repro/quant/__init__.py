@@ -1,0 +1,12 @@
+"""FP/INT quantization substrate: formats, fake-quant, MSE search, calibration."""
+from repro.quant.formats import (FPFormat, signed_formats, unsigned_formats,
+                                 enumerate_grid, quant_codes, FORMAT_BY_NAME)
+from repro.quant.fakequant import (QuantizerParams, fp_qdq, int_qdq, apply_qdq,
+                                   ste_qdq, quantizer_range,
+                                   KIND_FP_SIGNED, KIND_FP_UNSIGNED,
+                                   KIND_INT_AFFINE)
+from repro.quant.search import (SearchResult, search_signed_fp,
+                                search_unsigned_fp, search_int_affine,
+                                search_weight_params, search_activation_params)
+from repro.quant.calibrate import (CalibrationDB, QuantContext, AALConfig,
+                                   SiteStats, OFF)

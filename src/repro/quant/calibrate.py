@@ -1,0 +1,112 @@
+"""Calibration: collect per-site activation samples and classify AAL/NAL.
+
+The paper builds a Q-Diffusion-style calibration set (intermediate x_t
+states across timesteps), runs it through the FP model, and records the
+input activation of every quantized layer. A layer whose input distribution
+carries the SiLU signature — negative tail compressed into ~[-0.278, 0) —
+is an AAL (anomalous-activation-distribution layer); the rest are NALs.
+
+Models in this repo thread a ``QuantContext`` through their forward pass;
+in ``collect`` mode every quant site deposits a subsample of its input here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SiteStats:
+    samples: np.ndarray  # strided subsample of observed values
+    x_min: float
+    x_max: float
+    n_seen: int
+
+    @property
+    def asymmetry(self) -> float:
+        """|min| / max — near 0 for SiLU-fed (half-normal-ish) activations."""
+        if self.x_max <= 0:
+            return float("inf")
+        return abs(min(self.x_min, 0.0)) / self.x_max
+
+
+@dataclasses.dataclass
+class AALConfig:
+    """AAL classifier. A site is an AAL when its negative tail is both
+
+    shallow (bounded like SiLU's -0.278 * gamma) and small relative to the
+    positive range. Panel (b)/(c) of Fig. 1.
+    """
+
+    max_asymmetry: float = 0.30   # |min|/max below this -> asymmetric
+    min_floor: float = -0.45      # negative tail shallower than this
+
+
+class CalibrationDB:
+    """Accumulates activation samples per site across calibration batches."""
+
+    def __init__(self, sample_cap: int = 1 << 15):
+        self.sites: dict[str, SiteStats] = {}
+        self.sample_cap = sample_cap
+
+    def record(self, name: str, x) -> None:
+        arr = np.asarray(jnp.ravel(x), dtype=np.float32)
+        stride = max(1, arr.size // self.sample_cap)
+        sub = arr[::stride][: self.sample_cap]
+        if name in self.sites:
+            s = self.sites[name]
+            merged = np.concatenate([s.samples, sub])
+            if merged.size > self.sample_cap:
+                merged = merged[:: max(1, merged.size // self.sample_cap)]
+            self.sites[name] = SiteStats(
+                merged, min(s.x_min, float(arr.min())),
+                max(s.x_max, float(arr.max())), s.n_seen + arr.size)
+        else:
+            self.sites[name] = SiteStats(sub, float(arr.min()), float(arr.max()),
+                                         arr.size)
+
+    def is_aal(self, name: str, cfg: AALConfig | None = None) -> bool:
+        cfg = cfg or AALConfig()
+        s = self.sites[name]
+        return (s.x_min >= cfg.min_floor and s.x_min < 0.0
+                and s.asymmetry <= cfg.max_asymmetry)
+
+    def classify(self, cfg: AALConfig | None = None) -> dict[str, bool]:
+        return {n: self.is_aal(n, cfg) for n in self.sites}
+
+    def summary(self) -> dict[str, dict]:
+        return {
+            n: dict(min=s.x_min, max=s.x_max, asym=s.asymmetry, n=s.n_seen)
+            for n, s in self.sites.items()
+        }
+
+
+class QuantContext:
+    """Threaded through model forwards; behavior depends on mode.
+
+    mode='off'      : identity at every quant site (full-precision run).
+    mode='collect'  : record activation samples into a CalibrationDB.
+    mode='quantize' : apply the searched fake-quantizers (from a QuantPlan).
+    """
+
+    def __init__(self, mode: str = "off", db: CalibrationDB | None = None,
+                 plan=None, act_fn: Callable | None = None):
+        assert mode in ("off", "collect", "quantize")
+        self.mode = mode
+        self.db = db
+        self.plan = plan
+        self._act_fn = act_fn  # injected by core.msfp to avoid cyclic import
+
+    def act(self, name: str, x):
+        if self.mode == "collect":
+            self.db.record(name, x)
+            return x
+        if self.mode == "quantize" and self.plan is not None:
+            return self._act_fn(name, x, self.plan)
+        return x
+
+
+OFF = QuantContext("off")

@@ -1,0 +1,127 @@
+"""Fake quantization (quantize-dequantize) with straight-through gradients.
+
+``QuantizerParams`` is the runtime artifact produced by the MSE search
+(Alg. 1): a format, a grid maximum, and (unsigned only) a zero-point. The
+same struct drives the XLA path here, the Pallas kernel in
+``repro.kernels``, and the W4 packing in ``repro.core.qmodule``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import FPFormat, snap_to_base_grid
+
+# Quantizer kinds.
+KIND_FP_SIGNED = 0
+KIND_FP_UNSIGNED = 1  # unsigned FP + zero-point (the paper's Eq. 8)
+KIND_INT_AFFINE = 2  # INT baseline
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizerParams:
+    """Searched quantization parameters for one site (layer weight or act)."""
+
+    kind: int = dataclasses.field(metadata=dict(static=True))
+    exp_bits: int = dataclasses.field(metadata=dict(static=True))
+    man_bits: int = dataclasses.field(metadata=dict(static=True))
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    maxval: jnp.ndarray = dataclasses.field(default_factory=lambda: jnp.float32(1.0))
+    zero_point: jnp.ndarray = dataclasses.field(default_factory=lambda: jnp.float32(0.0))
+
+    @property
+    def fmt(self) -> FPFormat:
+        return FPFormat(self.exp_bits, self.man_bits, self.kind == KIND_FP_SIGNED)
+
+    @property
+    def is_unsigned(self) -> bool:
+        return self.kind == KIND_FP_UNSIGNED
+
+
+def fp_qdq(x: jnp.ndarray, fmt: FPFormat, maxval: jnp.ndarray,
+           zero_point: jnp.ndarray | float = 0.0) -> jnp.ndarray:
+    """Quantize-dequantize onto the scaled ExMy grid (no gradient handling).
+
+    Signed:   snap(|x|) * sign(x), clipped to [-maxval, maxval].
+    Unsigned: snap(x - z) on the non-negative grid, + z  (Eq. 8); inputs
+              below z round to the grid zero (i.e. to z itself).
+    """
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    maxval = jnp.asarray(maxval, jnp.float32)
+    scale = maxval / fmt.base_max
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    if fmt.signed:
+        y = jnp.abs(x) * inv
+        q = snap_to_base_grid(y, fmt) * scale
+        out = jnp.sign(x) * q
+    else:
+        z = jnp.asarray(zero_point, jnp.float32)
+        y = jnp.clip((x - z) * inv, 0.0, None)
+        out = snap_to_base_grid(y, fmt) * scale + z
+    return out.astype(dtype)
+
+
+def int_qdq(x: jnp.ndarray, bits: int, maxval: jnp.ndarray,
+            zero_point: jnp.ndarray | float = 0.0,
+            symmetric: bool = True) -> jnp.ndarray:
+    """Affine INT quantize-dequantize (Q-Diffusion-style baseline, Eq. 5)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if symmetric:
+        qmax = 2 ** (bits - 1) - 1
+        s = jnp.maximum(jnp.asarray(maxval, jnp.float32), 1e-30) / qmax
+        q = jnp.clip(jnp.round(x / s), -qmax - 1, qmax)
+        out = q * s
+    else:
+        qmax = 2**bits - 1
+        z = jnp.asarray(zero_point, jnp.float32)
+        s = jnp.maximum(jnp.asarray(maxval, jnp.float32) - z, 1e-30) / qmax
+        q = jnp.clip(jnp.round((x - z) / s), 0, qmax)
+        out = q * s + z
+    return out.astype(dtype)
+
+
+def apply_qdq(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
+    """Dispatch on quantizer kind (static)."""
+    if qp.kind == KIND_INT_AFFINE:
+        return int_qdq(x, qp.bits, qp.maxval, qp.zero_point, symmetric=False)
+    return fp_qdq(x, qp.fmt, qp.maxval, qp.zero_point)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator: identity gradient inside the representable
+# range, zero outside (clipped STE). Used for activation fake-quant during
+# TALoRA fine-tuning so gradients flow to the LoRA branches.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_qdq(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
+    return apply_qdq(x, qp)
+
+
+def _ste_fwd(x, qp):
+    lo = qp.zero_point if qp.is_unsigned else -qp.maxval
+    hi = qp.maxval + (qp.zero_point if qp.is_unsigned else 0.0)
+    mask = (x >= lo) & (x <= hi)
+    return apply_qdq(x, qp), mask
+
+
+def _ste_bwd(qp, mask, g):
+    return (g * mask.astype(g.dtype),)
+
+
+ste_qdq.defvjp(_ste_fwd, _ste_bwd)
+
+
+def quantizer_range(qp: QuantizerParams) -> tuple[Any, Any]:
+    """(lo, hi) of representable values."""
+    if qp.is_unsigned:
+        return qp.zero_point, qp.maxval + qp.zero_point
+    return -qp.maxval, qp.maxval

@@ -1,0 +1,157 @@
+"""Floating-point quantization formats (ExMy grids), signed and unsigned.
+
+The paper (Eq. 6/8/10) parameterizes an FP quantizer by a format ``ExMy``
+(x exponent bits, y mantissa bits), a sign bit ``s`` (1 = signed, 0 =
+unsigned), a bias ``b`` that acts as the scale/threshold (equivalently the
+grid maximum ``maxval``), and — for unsigned quantizers only — a zero-point
+``z`` shifting the whole grid.
+
+We represent the *base* (unscaled) grid with bias fixed so the smallest
+normal octave is ``[1, 2)``:
+
+  exponent field p in [0, 2^e - 1]
+    p = 0  -> subnormal:  v = m / 2^M                     (step 2^-M, covers [0, 1))
+    p >= 1 -> normal:     v = 2^(p-1) * (1 + m / 2^M)     (octave [2^(p-1), 2^p))
+
+  base_max = 2^(2^e - 2) * (2 - 2^-M)      (e >= 1)
+  e = 0    -> pure fixed point: v = m / 2^M, base_max = (2^M - 1) / 2^M
+
+A quantizer with grid maximum ``maxval`` is the base grid scaled by
+``maxval / base_max`` — this is the continuous-bias view the paper uses
+("maxval and b are directly correlated").
+
+E2M1 sanity check: {0, .5, 1, 1.5, 2, 3, 4, 6} — the standard FP4 grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FPFormat:
+    """An ExMy floating-point format, signed or unsigned."""
+
+    exp_bits: int
+    man_bits: int
+    signed: bool
+
+    @property
+    def bits(self) -> int:
+        return self.exp_bits + self.man_bits + (1 if self.signed else 0)
+
+    @property
+    def base_max(self) -> float:
+        if self.exp_bits == 0:
+            return (2**self.man_bits - 1) / 2**self.man_bits
+        return float(2 ** (2**self.exp_bits - 2) * (2.0 - 2.0**-self.man_bits))
+
+    @property
+    def name(self) -> str:
+        return f"{'s' if self.signed else 'u'}E{self.exp_bits}M{self.man_bits}"
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.name
+
+
+def signed_formats(bits: int) -> tuple[FPFormat, ...]:
+    """The paper's signed search space for a bit-width (Table 6 / App. B)."""
+    if bits == 4:
+        ems = [(3, 0), (2, 1), (1, 2), (0, 3)]
+    elif bits == 6:
+        ems = [(4, 1), (3, 2), (2, 3), (1, 4)]
+    elif bits == 8:
+        ems = [(5, 2), (4, 3), (3, 4), (2, 5)]
+    else:  # generic: every split with e+m = bits-1
+        ems = [(e, bits - 1 - e) for e in range(bits - 1, -1, -1)]
+    return tuple(FPFormat(e, m, True) for e, m in ems)
+
+
+def unsigned_formats(bits: int) -> tuple[FPFormat, ...]:
+    """All ExMy splits with x + y = bits (App. B: 'all possible formats')."""
+    # E>=6 grids span 2^62 dynamic range — numerically pointless for
+    # activations; cap exponent bits at 5 like the signed spaces do.
+    return tuple(
+        FPFormat(e, bits - e, False) for e in range(min(bits, 5), -1, -1)
+    )
+
+
+def enumerate_grid(fmt: FPFormat) -> np.ndarray:
+    """Every representable base-grid value, sorted ascending (test oracle)."""
+    vals = set()
+    m_range = range(2**fmt.man_bits)
+    if fmt.exp_bits == 0:
+        for m in m_range:
+            vals.add(m / 2**fmt.man_bits)
+    else:
+        for p in range(2**fmt.exp_bits):
+            for m in m_range:
+                if p == 0:
+                    vals.add(m / 2**fmt.man_bits)
+                else:
+                    vals.add(2.0 ** (p - 1) * (1 + m / 2**fmt.man_bits))
+    out = sorted(vals)
+    if fmt.signed:
+        out = sorted({-v for v in out} | set(out))
+    return np.asarray(out, dtype=np.float64)
+
+
+def snap_to_base_grid(y: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    """Round |y| (y >= 0) to the nearest base-grid point, clamped to base_max.
+
+    Arithmetic snap (no LUT/gather — VPU friendly, reused verbatim by the
+    Pallas kernel): pick the octave via floor(log2 y), quantize the mantissa
+    at that octave's step with round-to-nearest-even.
+    """
+    man = fmt.man_bits
+    if fmt.exp_bits == 0:
+        step = 2.0**-man
+        q = jnp.round(y / step) * step
+        return jnp.minimum(q, fmt.base_max)
+    max_oct = 2**fmt.exp_bits - 2  # exponent of the top octave
+    # Octave index; y < 1 (subnormal) shares the first octave's step 2^-M.
+    safe = jnp.maximum(y, 2.0**-40)
+    oct_ = jnp.clip(jnp.floor(jnp.log2(safe)), 0, max_oct)
+    step = jnp.exp2(oct_ - man)
+    q = jnp.round(y / step) * step
+    return jnp.minimum(q, fmt.base_max)
+
+
+def quant_codes(fmt: FPFormat) -> np.ndarray:
+    """Map 4-bit (or n-bit) integer codes -> base-grid values.
+
+    Code layout (unsigned part): p = code >> man_bits, m = code & (2^man-1).
+    Signed formats put the sign in the top bit. Used for packing weights.
+    """
+    n_mag = 2 ** (fmt.exp_bits + fmt.man_bits)
+    mags = np.zeros(n_mag)
+    for c in range(n_mag):
+        p, m = c >> fmt.man_bits, c & (2**fmt.man_bits - 1)
+        if fmt.exp_bits == 0 or p == 0:
+            mags[c] = m / 2**fmt.man_bits
+        else:
+            mags[c] = 2.0 ** (p - 1) * (1 + m / 2**fmt.man_bits)
+    if not fmt.signed:
+        return mags
+    return np.concatenate([mags, -mags])  # sign bit = MSB
+
+
+def encode_to_codes(x: np.ndarray, fmt: FPFormat, maxval: float) -> np.ndarray:
+    """Encode values to integer codes (numpy, offline packing path)."""
+    lut = quant_codes(fmt) * (maxval / fmt.base_max)
+    # nearest-value encode (offline only; packing runs once per checkpoint)
+    d = np.abs(x[..., None] - lut[None, :])
+    return np.argmin(d, axis=-1).astype(np.uint8)
+
+
+FORMAT_BY_NAME: dict[str, FPFormat] = {}
+for _b in (3, 4, 5, 6, 8):
+    for _f in signed_formats(_b) + unsigned_formats(_b):
+        FORMAT_BY_NAME[_f.name] = _f
+
+
+def format_list_names(fmts: Sequence[FPFormat]) -> list[str]:
+    return [f.name for f in fmts]

@@ -1,0 +1,170 @@
+"""TALoRA + DFA fine-tuning of a quantized diffusion model (paper §4.2/4.3).
+
+EfficientDM-style trajectory distillation: walk the FP teacher's DDIM
+trajectory; at each timestep t the quantized student (TALoRA merged for
+that t) matches the teacher's eps prediction under the DFA-weighted loss
+(Eq. 9). Only the LoRA hubs and the router train; the quantized base and
+the searched quantizers stay frozen.
+
+``loss_mode``: 'dfa' (Eq. 9) | 'plain' (Eq. 7 baseline for the ablation).
+``router_mode``: 'learned' (TALoRA) | 'single' (h=1 baseline) |
+'split' / 'random' (Table 1's dual-LoRA allocation strategies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dfa, talora
+from repro.diffusion.pipeline import QuantizedDiffusion
+from repro.diffusion.samplers import ddim_step
+from repro.diffusion.schedule import sample_timesteps
+from repro.nn.unet import unet_apply
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.quant.calibrate import QuantContext
+from repro.core import msfp
+
+
+@dataclasses.dataclass
+class FinetuneConfig:
+    steps_per_epoch: int = 20      # DDIM trajectory length during tuning
+    epochs: int = 4
+    batch: int = 8
+    lr: float = 1e-4
+    loss_mode: str = "dfa"         # dfa | plain
+    router_mode: str = "learned"   # learned | single | split | random
+    eta: float = 0.0
+    seed: int = 0
+
+
+def _select_fixed(mode: str, t_frac: float, h: int, key) -> jnp.ndarray:
+    """Non-learned allocation baselines from Table 1."""
+    if mode == "single" or h == 1:
+        return jax.nn.one_hot(0, h)
+    if mode == "split":  # first/second half of the trajectory
+        return jax.nn.one_hot(jnp.where(t_frac > 0.5, 0, 1), h)
+    if mode == "random":
+        return jax.nn.one_hot(jax.random.randint(key, (), 0, h), h)
+    raise ValueError(mode)
+
+
+def make_student_eps(bundle: QuantizedDiffusion, ft: FinetuneConfig):
+    """(hubs, router, x, t_batch, key) -> eps with the right LoRA routing."""
+    tcfg = bundle.talora_cfg
+    names = sorted(bundle.hubs)
+    qctx = QuantContext("quantize", plan=bundle.plan,
+                        act_fn=msfp.quantize_act)
+
+    def eps_fn(hubs, router, x, tb, key, t_frac):
+        t_scalar = tb.reshape(-1)[0]
+        if ft.router_mode == "learned":
+            sels = talora.route(router, t_scalar, names, tcfg)
+        else:
+            sel = _select_fixed(ft.router_mode, t_frac, tcfg.hub_size, key)
+            sels = {n: sel for n in names}
+        params = talora.merge_into_tree(bundle.q_params, hubs, sels, tcfg)
+        return unet_apply(params, x, tb, bundle.cfg, ctx=qctx)
+
+    return eps_fn
+
+
+def finetune(bundle: QuantizedDiffusion, ft: FinetuneConfig,
+             *, log: Callable[[str], None] | None = None
+             ) -> tuple[QuantizedDiffusion, list[dict]]:
+    """Runs the fine-tune; returns the bundle with trained hubs/router."""
+    assert bundle.hubs is not None, "bundle needs TALoRA attached"
+    sched = bundle.sched
+    cfg = bundle.cfg
+    seq = sample_timesteps(sched.T, ft.steps_per_epoch)
+    gammas = np.asarray(sched.gamma())
+    acfg = AdamConfig(lr=ft.lr, clip_norm=1.0)
+    eps_fn = make_student_eps(bundle, ft)
+
+    trainable = {"hubs": bundle.hubs, "router": bundle.router}
+    opt = adam_init(trainable, acfg)
+    teacher = jax.jit(lambda x, t: unet_apply(bundle.fp_params, x, t, cfg))
+
+    @partial(jax.jit, static_argnames=("t_frac_key",))
+    def train_step(tr, opt, x, tb, gamma_t, key, t_frac_key):
+        t_frac = jnp.float32(t_frac_key)
+
+        def loss(tr):
+            eps_t = jax.lax.stop_gradient(teacher(x, tb))
+            eps_s = eps_fn(tr["hubs"], tr["router"], x, tb, key, t_frac)
+            if ft.loss_mode == "dfa":
+                return dfa.dfa_loss(eps_t, eps_s, gamma_t)
+            return dfa.plain_loss(eps_t, eps_s)
+
+        l, g = jax.value_and_grad(loss)(tr)
+        tr, opt, metrics = adam_update(g, opt, tr, acfg)
+        return tr, opt, l, metrics
+
+    key = jax.random.PRNGKey(ft.seed)
+    logs = []
+    for epoch in range(ft.epochs):
+        key, k0 = jax.random.split(key)
+        shape = (ft.batch, cfg.image_size, cfg.image_size, cfg.in_ch)
+        x = jax.random.normal(k0, shape)
+        ep_losses = []
+        for i, t in enumerate(seq):
+            tb = jnp.full((ft.batch,), float(t), jnp.float32)
+            gamma_t = jnp.full((ft.batch,), gammas[int(t)], jnp.float32)
+            key, k1 = jax.random.split(key)
+            t_frac = float(t) / sched.T
+            trainable, opt, l, m = train_step(trainable, opt, x, tb, gamma_t,
+                                              k1, t_frac)
+            ep_losses.append(float(l))
+            # advance the trajectory with the TEACHER's prediction (the
+            # student input distribution follows the FP trajectory)
+            eps_t = teacher(x, tb)
+            t_prev = int(seq[i + 1]) if i + 1 < len(seq) else -1
+            x = ddim_step(sched, x, int(t), t_prev, eps_t, ft.eta)
+        logs.append({"epoch": epoch, "loss": float(np.mean(ep_losses))})
+        if log:
+            log(f"epoch {epoch}: loss={np.mean(ep_losses):.5f}")
+    bundle.hubs = trainable["hubs"]
+    bundle.router = trainable["router"]
+    return bundle, logs
+
+
+def eval_denoising_gap(bundle: QuantizedDiffusion, ft: FinetuneConfig,
+                       key, *, steps: int = 20, batch: int = 8
+                       ) -> dict[str, float]:
+    """Paper Fig. 3 metric: per-step MSE(x_{t-1}^fp, x_{t-1}^quant) along
+
+    the FP trajectory + final-image MSE (the FID proxy used on-box)."""
+    sched, cfg = bundle.sched, bundle.cfg
+    seq = sample_timesteps(sched.T, steps)
+    teacher = jax.jit(lambda x, t: unet_apply(bundle.fp_params, x, t, cfg))
+    eps_fn = make_student_eps(bundle, ft)
+    sfn = jax.jit(lambda x, tb, k, tf: eps_fn(bundle.hubs, bundle.router,
+                                              x, tb, k, tf))
+    shape = (batch, cfg.image_size, cfg.image_size, cfg.in_ch)
+    key, k0 = jax.random.split(key)
+    x_fp = jax.random.normal(k0, shape)
+    x_q = x_fp
+    gaps, eps_mses = [], []
+    for i, t in enumerate(seq):
+        tb = jnp.full((batch,), float(t), jnp.float32)
+        key, k1 = jax.random.split(key)
+        e_fp = teacher(x_fp, tb)
+        e_q = sfn(x_fp, tb, k1, float(t) / sched.T)  # teacher-forced input
+        eps_mses.append(float(jnp.mean((e_fp - e_q) ** 2)))
+        t_prev = int(seq[i + 1]) if i + 1 < len(seq) else -1
+        x_next_fp = ddim_step(sched, x_fp, int(t), t_prev, e_fp)
+        x_next_q = ddim_step(sched, x_fp, int(t), t_prev, e_q)
+        gaps.append(float(jnp.mean((x_next_fp - x_next_q) ** 2)))
+        # full-trajectory divergence for the final-image metric
+        e_q_traj = sfn(x_q, tb, k1, float(t) / sched.T)
+        x_q = ddim_step(sched, x_q, int(t), t_prev, e_q_traj)
+        x_fp = x_next_fp
+    final_mse = float(jnp.mean((x_fp - x_q) ** 2))
+    return {"final_image_mse": final_mse,
+            "mean_step_gap": float(np.mean(gaps)),
+            "mean_eps_mse": float(np.mean(eps_mses)),
+            "step_gaps": gaps, "eps_mses": eps_mses}

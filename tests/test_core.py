@@ -1,0 +1,125 @@
+"""Core package: MSFP plan, TALoRA routing/merging, DFA, W4 packing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as core
+from repro.common.tree import flatten_paths, unflatten_paths
+from repro.quant import CalibrationDB, QuantizerParams, KIND_FP_SIGNED, \
+    KIND_FP_UNSIGNED, fp_qdq
+
+
+def _fake_db(rng):
+    db = CalibrationDB()
+    x = rng.normal(size=20000).astype(np.float32)
+    db.record("mlp/down", x / (1 + np.exp(-x)))   # SiLU-fed -> AAL
+    db.record("attn/q", x)                        # symmetric -> NAL
+    return db
+
+
+def test_plan_modes_and_classification(rng):
+    db = _fake_db(rng)
+    weights = {"mlp/down/w": rng.normal(size=(32, 16)).astype(np.float32),
+               "attn/q/w": rng.normal(size=(16, 16)).astype(np.float32)}
+    plan = core.build_plan(weights, db, bits_w=4, bits_a=4, mode="msfp")
+    assert plan.sites["mlp/down"].is_aal and not plan.sites["attn/q"].is_aal
+    assert plan.sites["mlp/down"].qp.kind == KIND_FP_UNSIGNED
+    assert plan.sites["attn/q"].qp.kind == KIND_FP_SIGNED
+    # signed-only mode never emits unsigned
+    plan_s = core.build_plan(weights, db, mode="signed")
+    assert plan_s.n_unsigned() == 0
+    # INT mode
+    plan_i = core.build_plan(weights, db, mode="int")
+    assert all(s.qp.kind == 2 for s in plan_i.sites.values())
+
+
+def test_mixed_io_bits(rng):
+    db = _fake_db(rng)
+    weights = {"mlp/down/w": rng.normal(size=(8, 8)).astype(np.float32),
+               "attn/q/w": rng.normal(size=(8, 8)).astype(np.float32)}
+    plan = core.build_mixed_plan(weights, db, bits_w=4, bits_a=4,
+                                 io_sites={"attn/q/w", "attn/q"}, io_bits=8)
+    assert plan.sites["attn/q/w"].qp.bits == 8
+    assert plan.sites["mlp/down/w"].qp.bits == 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_router_hard_one_hot(t):
+    cfg = core.TALoRAConfig(hub_size=3, rank=2, t_emb_dim=16, router_hidden=8)
+    router = core.init_router(jax.random.PRNGKey(0), 5, cfg)
+    sel = core.route(router, jnp.float32(t), [f"l{i}" for i in range(5)], cfg)
+    for v in sel.values():
+        a = np.asarray(v)
+        assert np.isclose(a.sum(), 1.0) and np.isclose(a.max(), 1.0)
+
+
+def test_lora_merge_equals_branch(rng):
+    """merged (W + A B) forward == base + lora_delta branch."""
+    cfg = core.TALoRAConfig(hub_size=2, rank=4, alpha=8.0)
+    key = jax.random.PRNGKey(1)
+    w = jnp.asarray(rng.normal(size=(12, 10)).astype(np.float32))
+    hubs = core.init_lora_hub(key, {"lin/w": (12, 10)}, cfg)
+    hubs["lin/w"]["B"] = jax.random.normal(key, (2, 4, 10)) * 0.3
+    sel = jnp.asarray([0.0, 1.0])
+    x = jnp.asarray(rng.normal(size=(5, 12)).astype(np.float32))
+    branch = core.lora_apply(x, w, hubs["lin/w"], sel, cfg)
+    merged_tree = core.merge_into_tree({"lin": {"w": w}}, hubs,
+                                       {"lin/w": sel}, cfg)
+    np.testing.assert_allclose(np.asarray(x @ merged_tree["lin"]["w"]),
+                               np.asarray(branch), atol=1e-4)
+
+
+def test_conv_lora_merge_shape(rng):
+    cfg = core.TALoRAConfig(hub_size=2, rank=3)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    dims = core.lora_target_dims_from_weights({"conv/w": w})
+    assert dims["conv/w"] == (36, 8)
+    hubs = core.init_lora_hub(jax.random.PRNGKey(0), dims, cfg)
+    out = core.merge_into_tree({"conv": {"w": w}}, hubs,
+                               {"conv/w": jnp.asarray([1.0, 0.0])}, cfg)
+    assert out["conv"]["w"].shape == w.shape
+
+
+def test_dfa_weighting():
+    alphas = jnp.linspace(0.99, 0.9999, 50)
+    abar = jnp.cumprod(alphas)
+    g = core.denoising_factor(alphas, abar)
+    assert g.shape == (50,) and bool(jnp.all(g > 0))
+    eps1 = jnp.ones((4, 8))
+    eps2 = jnp.zeros((4, 8))
+    gt = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    assert float(core.dfa_loss(eps1, eps2, gt)) == pytest.approx(2.5)
+    assert float(core.plain_loss(eps1, eps2)) == pytest.approx(1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(e=st.integers(0, 3), m=st.integers(0, 3), signed=st.booleans(),
+       rows=st.integers(1, 9), cols=st.sampled_from([2, 4, 8, 16]))
+def test_pack_roundtrip_equals_fakequant(e, m, signed, rows, cols):
+    if e + m != (3 if signed else 4):  # 4-bit formats only
+        return
+    rng = np.random.default_rng(e * 100 + m * 10 + rows)
+    kind = KIND_FP_SIGNED if signed else KIND_FP_UNSIGNED
+    qp = QuantizerParams(kind, e, m, 4, jnp.float32(1.9),
+                         jnp.float32(-0.1 if not signed else 0.0))
+    w = rng.normal(size=(rows, cols)).astype(np.float32)
+    if not signed:
+        w = np.abs(w) - 0.1
+    pw = core.pack_weight(jnp.asarray(w), qp)
+    deq = np.asarray(core.dequant_weight(pw, jnp.float32))
+    want = np.asarray(fp_qdq(jnp.asarray(w), qp.fmt, qp.maxval, qp.zero_point))
+    np.testing.assert_allclose(deq, want, atol=1e-5)
+
+
+def test_quantize_param_tree_and_tree_roundtrip(rng):
+    tree = {"a": {"w": jnp.asarray(rng.normal(size=(8, 6)).astype(np.float32)),
+                  "b": jnp.zeros(6)},
+            "blocks": [{"w": jnp.ones((4, 4))}, {"w": jnp.zeros((4, 4))}]}
+    flat = flatten_paths(tree)
+    assert "blocks/#1/w" in flat
+    back = unflatten_paths(flat)
+    assert isinstance(back["blocks"], list)
+    np.testing.assert_allclose(np.asarray(back["blocks"][0]["w"]), 1.0)

@@ -1,0 +1,99 @@
+"""Per-kernel allclose sweeps (interpret mode) vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels.ops as ops
+from repro.core.qmodule import pack_weight
+from repro.kernels import ref
+from repro.quant.fakequant import (KIND_FP_SIGNED, KIND_FP_UNSIGNED,
+                                   QuantizerParams)
+
+
+@pytest.fixture(autouse=True)
+def force_interpret():
+    old = ops.FORCE
+    ops.FORCE = "interpret"
+    yield
+    ops.FORCE = old
+
+
+QDQ_CASES = [(KIND_FP_SIGNED, 2, 1), (KIND_FP_SIGNED, 1, 2),
+             (KIND_FP_SIGNED, 3, 0), (KIND_FP_SIGNED, 0, 3),
+             (KIND_FP_UNSIGNED, 2, 2), (KIND_FP_UNSIGNED, 3, 1),
+             (KIND_FP_UNSIGNED, 1, 3)]
+SHAPES = [(8, 32), (100, 300), (1, 128), (257, 511), (4, 7, 64)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("kind,e,m", QDQ_CASES)
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_msfp_qdq_kernel_matches_ref(kind, e, m, shape, rng):
+    qp = QuantizerParams(kind, e, m, 4, jnp.float32(2.3),
+                         jnp.float32(-0.15 if kind == KIND_FP_UNSIGNED else 0.0))
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    out = ops.msfp_quantize(x, qp)
+    want = ref.ref_msfp_qdq(x, qp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_msfp_qdq_kernel_dtypes(dtype, rng):
+    qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(1.7))
+    x = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32)).astype(dtype)
+    out = ops.msfp_quantize(x, qp)
+    want = ref.ref_msfp_qdq(x, qp)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=1e-2)
+
+
+@pytest.mark.parametrize("m,k,n", [(7, 96, 64), (128, 256, 128), (1, 64, 32),
+                                   (33, 130, 66)])
+@pytest.mark.parametrize("fmt", [(2, 1), (1, 2), (3, 0)], ids=str)
+def test_w4_matmul_kernel_matches_ref(m, k, n, fmt, rng):
+    e, mm = fmt
+    qp = QuantizerParams(KIND_FP_SIGNED, e, mm, 4, jnp.float32(2.5))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    pw = pack_weight(w, qp)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)).astype(jnp.bfloat16)
+    out = ops.w4_matmul(x, pw)
+    want = ref.ref_w4_matmul(x, pw, jnp.bfloat16)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-1, rtol=2e-2)
+
+
+def test_w4_matmul_3d_input(rng):
+    qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(1.0))
+    w = jnp.asarray(rng.normal(size=(32, 48)).astype(np.float32))
+    pw = pack_weight(w, qp)
+    x = jnp.asarray(rng.normal(size=(2, 5, 32)).astype(np.float32))
+    out = ops.w4_matmul(x, pw)
+    assert out.shape == (2, 5, 48)
+
+
+@pytest.mark.parametrize("shape", [(16, 64), (3, 5, 8, 128), (1, 1, 2, 64)],
+                         ids=str)
+def test_kv4_roundtrip_and_ref_match(shape, rng):
+    t = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    packed, scale = ops.kv4_encode(t)
+    back = ops.kv4_decode(packed, scale, jnp.float32)
+    pr, sr = ref.ref_kv4_encode(t.reshape(-1, shape[-1]))
+    assert bool(jnp.all(packed.reshape(-1, shape[-1] // 2) == pr))
+    np.testing.assert_allclose(
+        np.asarray(back),
+        np.asarray(ref.ref_kv4_decode(pr, sr, jnp.float32)).reshape(shape),
+        atol=1e-6)
+    # E2M1 with per-head scale: bounded relative error
+    rel = float(jnp.max(jnp.abs(back - t)) / jnp.max(jnp.abs(t)))
+    assert rel < 0.25
+
+
+def test_kv4_zero_row():
+    t = jnp.zeros((4, 64))
+    packed, scale = ops.kv4_encode(t)
+    back = ops.kv4_decode(packed, scale, jnp.float32)
+    np.testing.assert_allclose(np.asarray(back), 0.0, atol=1e-6)

@@ -1,0 +1,87 @@
+"""Launch-layer units: input specs, abstract quantization, grad accum."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, cells, LONG_OK
+from repro.core.qmodule import PackedW4
+from repro.common.tree import flatten_paths
+from repro.launch.steps import (abstract_params, input_specs,
+                                make_train_step, quantize_abstract)
+from repro.launch.dryrun import with_depth
+from repro.models.lm import lm_init
+from repro.optim.adam import AdamConfig, adam_init
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_cells_cover_40_minus_long_skips():
+    from repro.configs.registry import ARCH_IDS
+    cs = cells(ARCH_IDS)
+    assert len(cs) == 10 * 4 - (10 - len(LONG_OK))
+    assert ("mamba2-370m", "long_500k") in cs
+    assert ("qwen1.5-0.5b", "long_500k") not in cs
+
+
+def test_input_specs_shapes():
+    cfg = get_config("llava-next-mistral-7b")
+    sp = input_specs(cfg, SHAPES["prefill_32k"])
+    assert sp["batch"]["tokens"].shape == (32, 32768)
+    assert sp["batch"]["extra"].shape == (32, 576, 1024)
+    spd = input_specs(cfg, SHAPES["decode_32k"])
+    assert spd["token"].shape == (128, 1)
+    # llava caches: (groups, B, S, kv, hd)
+    k = spd["caches"]["blocks"][0]["k"]
+    assert k.shape == (32, 128, 32768, 8, 128)
+
+
+def test_decode_specs_windowed_cache_is_ring_sized():
+    cfg = get_config("gemma3-27b")
+    spd = input_specs(cfg, SHAPES["long_500k"])
+    local_k = spd["caches"]["blocks"][0]["k"]      # window=1024 ring
+    global_k = spd["caches"]["blocks"][5]["k"]     # global layer
+    assert local_k.shape[2] == 1024
+    assert global_k.shape[2] == 524288
+
+
+def test_quantize_abstract_marks_only_big_weights():
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    ap = abstract_params(cfg)
+    qt = quantize_abstract(ap)
+    flat = jax.tree_util.tree_flatten_with_path(qt)[0]
+    kinds = {type(l).__name__ for _, l in flat}
+    # embeddings stay dense (io convention); matmuls become packed
+    has_packed = any(isinstance(l, jax.ShapeDtypeStruct) is False
+                     for _, l in flat)
+    from repro.common.tree import flatten_paths as fp
+    # embed stays a ShapeDtypeStruct
+    assert isinstance(qt["embed"], jax.ShapeDtypeStruct)
+
+
+def test_with_depth_preserves_period():
+    cfg = get_config("gemma3-27b")
+    c1 = with_depth(cfg, 1)
+    assert c1.n_groups == 1 and c1.first_k_dense == cfg.first_k_dense
+    assert c1.n_layers == cfg.first_k_dense + cfg.period
+
+
+def test_grad_accum_matches_single_step():
+    cfg = get_config("smollm-135m", smoke=True)
+    p = lm_init(KEY, cfg)
+    acfg = AdamConfig(lr=1e-3, clip_norm=None)
+    opt = adam_init(p, acfg)
+    toks = jax.random.randint(KEY, (4, 16), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    s1 = make_train_step(cfg, acfg, grad_accum=1)
+    s2 = make_train_step(cfg, acfg, grad_accum=2)
+    p1, _, m1 = jax.jit(s1)(p, opt, batch)
+    p2, _, m2 = jax.jit(s2)(p, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=2e-2)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2)
+    assert max(jax.tree.leaves(d)) < 5e-2

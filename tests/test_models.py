@@ -1,0 +1,142 @@
+"""Per-arch smoke tests + the decode-vs-forward consistency invariant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models.lm import (decode_step, forward, init_caches, lm_init,
+                             loss_fn, LMConfig, ATTN, SSM)
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _inputs(cfg):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    extra = (jax.random.normal(KEY, (B, cfg.n_img_tokens, cfg.d_vision))
+             if cfg.family == "vlm" else None)
+    return toks, extra
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_decode(arch):
+    """(f) reduced config: one forward + one decode, shapes + no NaNs."""
+    cfg = get_config(arch, smoke=True)
+    p = lm_init(KEY, cfg)
+    toks, extra = _inputs(cfg)
+    logits = forward(p, cfg, toks, extra)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    l = loss_fn(p, cfg, toks, extra)
+    assert bool(jnp.isfinite(l))
+    caches = init_caches(cfg, B, S)
+    lg, caches2 = decode_step(p, cfg, caches, toks[:, :1], jnp.int32(0))
+    assert lg.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(lg).all())
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "gemma3-27b", "mamba2-370m",
+                                  "zamba2-2.7b", "kimi-k2-1t-a32b"])
+def test_arch_train_step_decreases_loss(arch):
+    from repro.optim.adam import AdamConfig, adam_init, adam_update
+    cfg = get_config(arch, smoke=True)
+    p = lm_init(KEY, cfg)
+    toks, extra = _inputs(cfg)
+    acfg = AdamConfig(lr=5e-3)
+    opt = adam_init(p, acfg)
+
+    @jax.jit
+    def step(p, opt):
+        l, g = jax.value_and_grad(lambda p: loss_fn(p, cfg, toks, extra))(p)
+        p, opt, _ = adam_update(g, opt, p, acfg)
+        return p, opt, l
+
+    losses = []
+    for _ in range(5):
+        p, opt, l = step(p, opt)
+        losses.append(float(l))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("name,cfg", [
+    ("dense", LMConfig("t", n_layers=3, d_model=64, n_heads=4, n_kv=2,
+                       d_ff=128, vocab=97, qkv_bias=True, dtype=jnp.float32,
+                       q_chunk=4)),
+    ("swa", LMConfig("t", n_layers=4, d_model=64, n_heads=4, n_kv=2,
+                     d_ff=128, vocab=97, dtype=jnp.float32, q_chunk=4,
+                     layer_pattern=((ATTN, 4, 10_000.0), (ATTN, 4, 10_000.0),
+                                    (ATTN, None, 10_000.0),
+                                    (ATTN, 4, 10_000.0)))),
+    ("ssm", LMConfig("t", n_layers=4, d_model=64, n_heads=4, n_kv=4, d_ff=0,
+                     vocab=97, family="ssm", ssm_d_state=16, ssm_headdim=16,
+                     ssm_chunk=4, layer_pattern=((SSM, None, 10_000.0),),
+                     dtype=jnp.float32)),
+    ("hybrid", LMConfig("t", n_layers=4, d_model=64, n_heads=4, n_kv=4,
+                        d_ff=64, vocab=97, family="hybrid", ssm_d_state=16,
+                        ssm_headdim=16, ssm_chunk=4, mlp_kind="gelu",
+                        layer_pattern=((SSM, None, 10_000.0),) * 2,
+                        shared_attn_every=2, dtype=jnp.float32, q_chunk=4)),
+    ("moe", LMConfig("t", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                     d_ff=128, vocab=97, family="moe", n_experts=4, top_k=2,
+                     moe_d_ff=32, capacity_factor=4.0, dtype=jnp.float32,
+                     q_chunk=4)),
+])
+def test_decode_matches_forward(name, cfg):
+    """The strongest invariant: stepwise decode == full causal forward."""
+    p = lm_init(KEY, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, 12), 0, cfg.vocab)
+    full = forward(p, cfg, toks)
+    caches = init_caches(cfg, B, 12)
+    step = jax.jit(lambda c, t, i: decode_step(p, cfg, c, t, i))
+    outs = []
+    for i in range(12):
+        lg, caches = step(caches, toks[:, i:i + 1], jnp.int32(i))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.abs(full - dec).max() / (jnp.abs(full).max() + 1e-9))
+    assert err < 2e-2, err
+
+
+def test_unroll_mode_matches_scan():
+    import dataclasses
+    cfg = LMConfig("t", n_layers=4, d_model=32, n_heads=4, n_kv=2, d_ff=64,
+                   vocab=64, dtype=jnp.float32, q_chunk=4)
+    p = lm_init(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    a = forward(p, cfg, toks)
+    b = forward(p, dataclasses.replace(cfg, unroll=True), toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_ring_buffer_window_decode_long_context():
+    """Windowed layer decoding past the window: ring cache still matches
+
+    a full forward with the same sliding-window mask."""
+    cfg = LMConfig("t", n_layers=2, d_model=32, n_heads=2, n_kv=2, d_ff=64,
+                   vocab=64, dtype=jnp.float32, q_chunk=4,
+                   layer_pattern=((ATTN, 4, 10_000.0),))
+    p = lm_init(KEY, cfg)
+    s = 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, s), 0, cfg.vocab)
+    full = forward(p, cfg, toks)
+    caches = init_caches(cfg, 1, s)  # ring size = window = 4
+    step = jax.jit(lambda c, t, i: decode_step(p, cfg, c, t, i))
+    outs = []
+    for i in range(s):
+        lg, caches = step(caches, toks[:, i:i + 1], jnp.int32(i))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.abs(full - dec).max() / (jnp.abs(full).max() + 1e-9))
+    assert err < 2e-2, err
+
+
+def test_param_counts_close_to_published():
+    expected = {"mamba2-370m": 0.37e9, "qwen1.5-0.5b": 0.46e9,
+                "gemma3-27b": 28e9, "smollm-135m": 0.135e9,
+                "kimi-k2-1t-a32b": 1.03e12,
+                "llava-next-mistral-7b": 7.2e9, "zamba2-2.7b": 2.4e9}
+    for arch, want in expected.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < 0.12, (arch, got, want)
