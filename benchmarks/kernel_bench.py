@@ -14,6 +14,18 @@ from repro.core.qmodule import pack_weight
 from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
 
 
+def _w4_hbm_bytes(m, k, n, fused: bool) -> int:
+    """Serving-path HBM bytes for one W4(A4) matmul: read bf16 x + packed
+    weight, write bf16 out. The unfused pipeline round-trips the quantized
+    activations (write + re-read of x) before the matmul."""
+    x_bytes = m * k * 2
+    packed = k * n // 2
+    out = m * n * 2
+    if fused:
+        return x_bytes + packed + out
+    return 3 * x_bytes + packed + out  # qdq: read x, write xq; matmul: read xq
+
+
 def rows(log=print) -> list[dict]:
     out = []
     key = jax.random.PRNGKey(0)
@@ -38,6 +50,34 @@ def rows(log=print) -> list[dict]:
                 "derived": f"weight bytes 4x smaller; bf16 dense={us_bf:.0f}us"})
     out.append({"name": "dense_bf16_matmul_ref", "us_per_call": us_bf,
                 "derived": "baseline"})
+
+    # per-output-channel scale (vector-scale PackedW4, same Pallas path)
+    mv_pc = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8).astype(jnp.float32)
+    qp_pc = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, mv_pc)
+    pw_pc = pack_weight(w, qp_pc)
+    f_pc = jax.jit(lambda x: ops.w4_matmul(x, pw_pc))
+    us_pc = timer(f_pc, xb)
+    out.append({"name": "w4_matmul_perchannel_256x2048x2048",
+                "us_per_call": us_pc,
+                "derived": f"scale bytes {n * 4}B vs 4B scalar"})
+
+    # fused W4A4 vs qdq-then-matmul: same math, one fewer HBM round-trip
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(4.0))
+    f_fused = jax.jit(lambda x: ops.w4a4_matmul(x, pw, act_qp))
+    us_fused = timer(f_fused, xb)
+    f_2pass = jax.jit(lambda x: ops.w4_matmul(ops.msfp_quantize(x, act_qp),
+                                              pw))
+    us_2pass = timer(f_2pass, xb)
+    b_fused = _w4_hbm_bytes(m, k, n, fused=True)
+    b_2pass = _w4_hbm_bytes(m, k, n, fused=False)
+    out.append({"name": "w4a4_matmul_fused_256x2048x2048",
+                "us_per_call": us_fused,
+                "derived": f"HBM {b_fused / 1e6:.2f}MB vs "
+                           f"{b_2pass / 1e6:.2f}MB qdq-then-matmul "
+                           f"({b_2pass / b_fused:.2f}x)"})
+    out.append({"name": "w4a4_matmul_qdq_then_matmul_ref",
+                "us_per_call": us_2pass,
+                "derived": f"HBM {b_2pass / 1e6:.2f}MB"})
 
     t = jax.random.normal(key, (128, 32, 8, 128), jnp.bfloat16)
     f_enc = jax.jit(lambda t: ops.kv4_encode(t))

@@ -43,6 +43,15 @@ def ambient_mesh():
             return m
     except Exception:
         pass
+    # Older JAX (no get_abstract_mesh / jax.set_mesh): ``with mesh:`` sets
+    # the thread-resources physical mesh instead.
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty and m.axis_names:
+            return m
+    except Exception:
+        pass
     return None
 
 

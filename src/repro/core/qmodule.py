@@ -119,11 +119,20 @@ def unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
 
 
 def pack_weight(w: jnp.ndarray, qp: QuantizerParams) -> PackedW4:
-    """Quantize + pack one weight under its searched parameters."""
+    """Quantize + pack one weight under its searched parameters.
+
+    ``qp.maxval`` may be a scalar (per-tensor) or, when the plan's search
+    produced per-output-channel maxima, an (out,) vector — the resulting
+    PackedW4 carries the vector scale and the Pallas kernel dequantizes
+    per channel.
+    """
     fmt = qp.fmt
     assert fmt.bits == 4, f"packing is 4-bit only, got {fmt.bits}"
-    codes = encode_codes(w, fmt, qp.maxval, qp.zero_point)
     scale = jnp.asarray(qp.maxval, jnp.float32)
+    if scale.ndim == 1:
+        assert w.ndim == 2 and scale.shape[0] == w.shape[-1], \
+            f"per-channel scale {scale.shape} vs weight {w.shape}"
+    codes = encode_codes(w, fmt, qp.maxval, qp.zero_point)
     # zero_point mirrors the scale's shape so stacked (per-layer) packs stay
     # scannable (lax.scan needs equal leading dims on every leaf)
     zp = jnp.broadcast_to(jnp.asarray(qp.zero_point, jnp.float32), scale.shape)

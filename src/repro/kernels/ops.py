@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.core.qmodule import PackedW4
 from repro.kernels import ref as _ref
-from repro.quant.fakequant import QuantizerParams
+from repro.quant.fakequant import KIND_FP_SIGNED, KIND_INT_AFFINE, QuantizerParams
 
 FORCE: str | None = None
 
@@ -37,19 +37,59 @@ def msfp_quantize(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
     return _ref.ref_msfp_qdq(x, qp)
 
 
+def _pallas_w4_ok(pw: PackedW4) -> bool:
+    """The Pallas kernel covers the full MSFP format space (signed and
+    unsigned ExMy, scalar or per-output-channel scale) for single 2D packs;
+    stacked (scanned) packs with per-slice scales stay on the XLA path."""
+    if jnp.ndim(pw.packed) != 2:
+        return False
+    if jnp.ndim(pw.scale) == 0:
+        return True
+    return (jnp.ndim(pw.scale) == 1
+            and pw.scale.shape[0] == 2 * pw.packed.shape[-1])
+
+
 def w4_matmul(x: jnp.ndarray, pw: PackedW4) -> jnp.ndarray:
     """x: (..., K) @ packed W4 (K, N/2-packed) -> (..., N)."""
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
-    # Pallas kernel supports signed scalar-scale formats; fall back otherwise.
-    if _use_pallas() and pw.signed and jnp.ndim(pw.scale) == 0:
+    if _use_pallas() and _pallas_w4_ok(pw):
         from repro.kernels.w4_matmul import w4_matmul_2d
-        out = w4_matmul_2d(x2, pw.packed, pw.scale, exp_bits=pw.exp_bits,
-                           man_bits=pw.man_bits, signed=True,
-                           interpret=_interpret())
+        out = w4_matmul_2d(x2, pw.packed, pw.scale, pw.zero_point,
+                           exp_bits=pw.exp_bits, man_bits=pw.man_bits,
+                           signed=pw.signed, interpret=_interpret())
     else:
         out = _ref.ref_w4_matmul(x2, pw, x.dtype)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def w4a4_matmul(x: jnp.ndarray, pw: PackedW4,
+                act_qp: QuantizerParams | None) -> jnp.ndarray:
+    """Fused activation-quant + W4 matmul: qdq(x, act_qp) @ W in one kernel.
+
+    Saves one full HBM round-trip over x versus msfp_quantize followed by
+    w4_matmul. ``act_qp`` must be an FP (signed/unsigned) per-tensor
+    quantizer; INT-affine activations fall back to qdq-then-matmul.
+    """
+    if act_qp is None:
+        return w4_matmul(x, pw)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if (_use_pallas() and _pallas_w4_ok(pw)
+            and act_qp.kind != KIND_INT_AFFINE
+            and jnp.ndim(act_qp.maxval) == 0):
+        from repro.kernels.w4_matmul import w4a4_matmul_2d
+        out = w4a4_matmul_2d(
+            x2, pw.packed, pw.scale, pw.zero_point,
+            act_qp.maxval, act_qp.zero_point,
+            exp_bits=pw.exp_bits, man_bits=pw.man_bits, signed=pw.signed,
+            act_exp_bits=act_qp.exp_bits, act_man_bits=act_qp.man_bits,
+            act_signed=(act_qp.kind == KIND_FP_SIGNED),
+            interpret=_interpret())
+    else:
+        out = _ref.ref_w4a4_matmul(x2, pw, act_qp, x.dtype)
     return out.reshape(*lead, out.shape[-1])
 
 

@@ -23,6 +23,12 @@ def ref_w4_matmul(x: jnp.ndarray, pw: PackedW4,
     return (x.astype(jnp.float32) @ w).astype(dtype)
 
 
+def ref_w4a4_matmul(x: jnp.ndarray, pw: PackedW4, act_qp: QuantizerParams,
+                    dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Oracle for the fused W4A4 kernel: qdq(x) through HBM, then matmul."""
+    return ref_w4_matmul(apply_qdq(x, act_qp), pw, dtype)
+
+
 def ref_kv4_encode(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Oracle for FP4 KV-cache encode: per-(…, head) absmax scale, E2M1.
 

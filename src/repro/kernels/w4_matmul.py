@@ -1,14 +1,26 @@
-"""Pallas TPU kernel: packed-FP4 weight matmul with in-VMEM dequant.
+"""Pallas TPU kernels: packed-FP4 weight matmul with in-VMEM dequant.
 
 y = x @ W where W is stored as packed nibbles (split-half layout:
 packed[k, j] holds logical columns j (lo nibble) and j + N/2 (hi)).
 HBM traffic for the weight is the *packed* bytes (K*N/2); nibbles are
 expanded and decoded to bf16 inside VMEM, then fed to the MXU.
 
+Covered format space (the full MSFP family):
+  * signed ExMy, scalar or per-output-channel scale;
+  * unsigned ExMy with zero-point: dequant is ``mag * scale + zp``. The
+    additive zp never materializes in the weight tile — it contributes
+    ``zp_n * sum_k x[i, k]`` to output (i, n), accumulated per k-block
+    alongside the MXU dot (one VPU row-reduction per block).
+  * fused W4A4 (``w4a4_matmul_2d``): the MSFP activation fake-quant snap
+    (``msfp_quant._qdq_block``) is applied to the x tile in VMEM before
+    the dot, removing the separate qdq kernel's HBM round-trip over x.
+
 Grid: (half, M/bm, (N/2)/bn, K/bk) — the `half` axis selects the nibble
 and addresses the corresponding output column block, so no lane interleave
 is ever needed. K is the innermost (arbitrary) axis accumulating into an
-f32 VMEM scratch.
+f32 VMEM scratch. Scales/zero-points ride as a (2, N/2) operand blocked
+(1, bn) and indexed by the (half, j) grid axes, so each program sees
+exactly the scales of the columns it decodes.
 """
 from __future__ import annotations
 
@@ -19,12 +31,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.qmodule import PackedW4
+from repro.kernels.msfp_quant import _qdq_block
 from repro.quant.formats import FPFormat
 
 
 def _decode_block(codes, fmt: FPFormat, scale):
-    """Nibble codes (already masked to 4 bits) -> f32 values * scale."""
+    """Nibble codes (already masked to 4 bits) -> f32 values * scale.
+
+    ``scale`` broadcasts: a scalar (per-tensor) or a (1, bn) row
+    (per-output-channel). Unsigned zero-points are handled by the caller
+    via the rank-1 correction term, never here.
+    """
     man = fmt.man_bits
     nbits = fmt.exp_bits + fmt.man_bits
     c = codes.astype(jnp.int32)
@@ -44,7 +61,9 @@ def _decode_block(codes, fmt: FPFormat, scale):
     return val
 
 
-def _kernel(x_ref, p_ref, s_ref, o_ref, acc_ref, *, fmt: FPFormat, nk: int):
+def _kernel(x_ref, p_ref, s_ref, z_ref, amz_ref, o_ref, acc_ref, *,
+            fmt: FPFormat, nk: int, k_valid: int, act_fmt: FPFormat | None,
+            act_signed: bool):
     h = pl.program_id(0)
     k = pl.program_id(3)
 
@@ -52,29 +71,49 @@ def _kernel(x_ref, p_ref, s_ref, o_ref, acc_ref, *, fmt: FPFormat, nk: int):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    x = x_ref[...]
+    if act_fmt is not None:
+        # Fused W4A4: snap the activation tile to its MSFP grid in VMEM.
+        x = _qdq_block(x, amz_ref[0, 0], amz_ref[0, 1], act_fmt, act_signed)
+        if not act_signed:
+            # Unsigned act quant maps the zero-padded K rows to qdq(0) != 0
+            # (the grid floor is the zero-point); zero them back so neither
+            # the dot nor the zp rowsum sees phantom rows.
+            bk = x.shape[1]
+            col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+            x = jnp.where(col + k * bk < k_valid, x,
+                          jnp.zeros_like(x))
+
     shift = h * 4
     codes = (p_ref[...].astype(jnp.int32) >> shift) & 0xF
-    scale = s_ref[0, 0] / fmt.base_max
-    w = _decode_block(codes, fmt, scale).astype(x_ref.dtype)
-    acc_ref[...] += jnp.dot(x_ref[...], w,
-                            preferred_element_type=jnp.float32)
+    scale = s_ref[0, :] * (1.0 / fmt.base_max)          # (bn,) per-channel
+    w = _decode_block(codes, fmt, scale[None, :]).astype(x.dtype)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if not fmt.signed:
+        # zp contributes zp_n * sum_k x_ik; accumulate the block's rowsum.
+        rowsum = jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
+        acc_ref[...] += rowsum * z_ref[0, :][None, :]
 
     @pl.when(k == nk - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("exp_bits", "man_bits", "signed",
-                                             "bm", "bn", "bk", "interpret"))
-def w4_matmul_2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
-                 *, exp_bits: int, man_bits: int, signed: bool = True,
-                 bm: int = 128, bn: int = 128, bk: int = 512,
-                 interpret: bool = False) -> jnp.ndarray:
-    """x: (M, K) bf16; packed: (K, N/2) uint8 -> (M, N) x.dtype."""
-    fmt = FPFormat(exp_bits, man_bits, signed)
+def _split_half_rows(vec: jnp.ndarray, n_half: int, pad: int) -> jnp.ndarray:
+    """(N,) channel vector -> (2, N/2 [+pad]) rows matching the nibble halves."""
+    op = jnp.stack([vec[:n_half], vec[n_half:]])
+    if pad:
+        op = jnp.pad(op, ((0, 0), (0, pad)))
+    return op
+
+
+def _w4_call(x, packed, scale, zero_point, act_mz, *, fmt: FPFormat,
+             act_fmt: FPFormat | None, act_signed: bool,
+             bm: int, bn: int, bk: int, interpret: bool) -> jnp.ndarray:
     m, k = x.shape
     k2, n_half = packed.shape
     assert k == k2, (x.shape, packed.shape)
+    n = 2 * n_half
     bm = min(bm, m)
     bn = min(bn, n_half)
     bk = min(bk, k)
@@ -86,19 +125,84 @@ def w4_matmul_2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
     mm, kk = x.shape
     nh = packed.shape[1]
     nk = kk // bk
-    sc = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    # Normalize scale / zero_point to per-channel rows in split-half layout;
+    # padded columns get scale 0 so their (sliced-off) outputs stay finite.
+    sc = jnp.asarray(scale, jnp.float32)
+    sc = jnp.broadcast_to(sc.reshape(-1) if sc.ndim else sc, (n,))
+    zp = jnp.asarray(zero_point, jnp.float32)
+    zp = jnp.broadcast_to(zp.reshape(-1) if zp.ndim else zp, (n,))
+    s_op = _split_half_rows(sc, n_half, pn)
+    z_op = _split_half_rows(zp, n_half, pn)
+    amz = jnp.stack([jnp.asarray(act_mz[0], jnp.float32),
+                     jnp.asarray(act_mz[1], jnp.float32)]).reshape(1, 2)
+
     out = pl.pallas_call(
-        functools.partial(_kernel, fmt=fmt, nk=nk),
+        functools.partial(_kernel, fmt=fmt, nk=nk, k_valid=k,
+                          act_fmt=act_fmt, act_signed=act_signed),
         grid=(2, mm // bm, nh // bn, nk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda h, i, j, kb: (i, kb)),
             pl.BlockSpec((bk, bn), lambda h, i, j, kb: (kb, j)),
-            pl.BlockSpec((1, 1), lambda h, i, j, kb: (0, 0)),
+            pl.BlockSpec((1, bn), lambda h, i, j, kb: (h, j)),
+            pl.BlockSpec((1, bn), lambda h, i, j, kb: (h, j)),
+            pl.BlockSpec((1, 2), lambda h, i, j, kb: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn),
                                lambda h, i, j, kb: (i, h * (nh // bn) + j)),
         out_shape=jax.ShapeDtypeStruct((mm, 2 * nh), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, packed, sc)
-    return out[:m, : 2 * n_half]
+    )(x, packed, s_op, z_op, amz)
+    out = out[:m]
+    if pn:
+        # Column pad puts the hi half at offset nh, not n_half: re-join.
+        out = jnp.concatenate([out[:, :n_half], out[:, nh:nh + n_half]],
+                              axis=1)
+    else:
+        out = out[:, :n]
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("exp_bits", "man_bits", "signed",
+                                             "bm", "bn", "bk", "interpret"))
+def w4_matmul_2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                 zero_point: jnp.ndarray | float = 0.0,
+                 *, exp_bits: int, man_bits: int, signed: bool = True,
+                 bm: int = 128, bn: int = 128, bk: int = 512,
+                 interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K) bf16/f32; packed: (K, N/2) uint8 -> (M, N) x.dtype.
+
+    ``scale`` (grid maxval) and ``zero_point`` are scalars or (N,) vectors
+    (per-output-channel). ``zero_point`` is only meaningful for unsigned
+    formats (``signed=False``).
+    """
+    fmt = FPFormat(exp_bits, man_bits, signed)
+    return _w4_call(x, packed, scale, zero_point, (0.0, 0.0), fmt=fmt,
+                    act_fmt=None, act_signed=True, bm=bm, bn=bn, bk=bk,
+                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "exp_bits", "man_bits", "signed", "act_exp_bits", "act_man_bits",
+    "act_signed", "bm", "bn", "bk", "interpret"))
+def w4a4_matmul_2d(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                   zero_point: jnp.ndarray | float,
+                   act_maxval: jnp.ndarray, act_zero_point: jnp.ndarray,
+                   *, exp_bits: int, man_bits: int, signed: bool,
+                   act_exp_bits: int, act_man_bits: int, act_signed: bool,
+                   bm: int = 128, bn: int = 128, bk: int = 512,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Fused act-quant + W4 matmul: qdq(x) @ dequant(packed) in one pass.
+
+    Equivalent to ``msfp_qdq(x, act_qp)`` followed by ``w4_matmul_2d`` but
+    without writing/re-reading the quantized activations through HBM.
+    ``act_maxval`` / ``act_zero_point`` are the searched per-tensor MSFP
+    activation parameters.
+    """
+    fmt = FPFormat(exp_bits, man_bits, signed)
+    act_fmt = FPFormat(act_exp_bits, act_man_bits, act_signed)
+    return _w4_call(x, packed, scale, zero_point,
+                    (act_maxval, act_zero_point), fmt=fmt, act_fmt=act_fmt,
+                    act_signed=act_signed, bm=bm, bn=bn, bk=bk,
+                    interpret=interpret)

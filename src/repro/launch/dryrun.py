@@ -35,7 +35,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ARCH_IDS, all_cells, get_config
 from repro.configs.shapes import SHAPES
-from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.mesh import (make_production_mesh, mesh_chip_count,
+                               mesh_scope)
 from repro.launch.sharding import (cache_shardings, data_spec,
                                    param_shardings)
 from repro.launch.steps import (abstract_caches, abstract_opt,
@@ -129,7 +130,7 @@ def _compile_cell(cfg, shape, mesh, *, quant: str, kv: str, big: bool,
     set_dp_axes(batch_axes)  # activation hints must match input shardings
     rec: dict = {}
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_scope(mesh):
         aparams = abstract_params(cfg)
         if quant == "w4" and shape.kind != "train":
             aparams = quantize_abstract(aparams)

@@ -17,9 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, mesh_scope
 from repro.launch.steps import make_decode_fn, quantize_lm_for_serving
 from repro.models.lm import forward, init_caches, lm_init
+from repro.quant.calibrate import QuantContext
+from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
 
 
 def main(argv=None) -> None:
@@ -29,8 +31,16 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--quant", default="bf16", choices=["bf16", "w4"])
+    ap.add_argument("--quant", default="bf16",
+                    choices=["bf16", "w4", "w4pc"],
+                    help="w4 = per-tensor scales; w4pc = per-output-channel")
     ap.add_argument("--kv", default="bf16", choices=["bf16", "fp8", "fp4"])
+    ap.add_argument("--act-quant", default="off", choices=["off", "fp4"],
+                    help="fp4 = fuse E2M1 activation quant into the W4 "
+                         "matmul kernel (W4A4 serving)")
+    ap.add_argument("--act-maxval", type=float, default=6.0,
+                    help="per-tensor activation grid max for --act-quant "
+                         "(deployment default; calibration would refine it)")
     ap.add_argument("--greedy", action="store_true", default=True)
     args = ap.parse_args(argv)
 
@@ -39,19 +49,31 @@ def main(argv=None) -> None:
     mesh = make_host_mesh()
     s_max = args.prompt_len + args.gen_len
 
-    with jax.set_mesh(mesh):
+    with mesh_scope(mesh):
         key = jax.random.PRNGKey(0)
         params = lm_init(key, cfg)
-        if args.quant == "w4":
+        if args.quant in ("w4", "w4pc"):
             t0 = time.time()
-            params = quantize_lm_for_serving(params, searched=False)
-            print(f"quantized to W4 in {time.time() - t0:.1f}s")
+            params = quantize_lm_for_serving(
+                params, searched=False, per_channel=(args.quant == "w4pc"))
+            print(f"quantized to W4 ({args.quant}) in {time.time() - t0:.1f}s")
+        ctx = None
+        if args.act_quant == "fp4" and args.quant == "bf16":
+            print("warning: --act-quant fp4 has no effect with --quant bf16 "
+                  "(fused activation quant runs inside the packed W4 "
+                  "matmul); pass --quant w4 or w4pc")
+        if args.act_quant == "fp4":
+            # Fused W4A4: every packed dense site quantizes its input to
+            # signed E2M1 inside the matmul kernel (no separate qdq pass).
+            qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
+                                 jnp.float32(args.act_maxval))
+            ctx = QuantContext("serve", act_qps={"*": qp})
         prompts = jax.random.randint(key, (args.batch, args.prompt_len),
                                      0, cfg.vocab)
         extra = (jnp.zeros((args.batch, cfg.n_img_tokens, cfg.d_vision),
                            cfg.dtype) if cfg.family == "vlm" else None)
         caches = init_caches(cfg, args.batch, s_max)
-        dec = jax.jit(make_decode_fn(cfg))
+        dec = jax.jit(make_decode_fn(cfg, ctx=ctx))
 
         # prefill by stepping the prompt (teacher-forced decode fills caches)
         t0 = time.time()
@@ -73,7 +95,8 @@ def main(argv=None) -> None:
         jax.block_until_ready(logits)
         decode_s = time.time() - t0
         gen = np.stack(out_tokens, axis=1)
-        print(f"arch={cfg.name} quant={args.quant} kv={args.kv}")
+        print(f"arch={cfg.name} quant={args.quant} act={args.act_quant} "
+              f"kv={args.kv}")
         print(f"prefill: {prefill_s:.2f}s  decode: {decode_s:.2f}s "
               f"({args.gen_len * args.batch / max(decode_s, 1e-9):.1f} tok/s)")
         print("sample ids:", gen[0][:16].tolist())

@@ -87,9 +87,12 @@ def make_prefill_step(cfg: LMConfig):
     return prefill_step
 
 
-def make_decode_fn(cfg: LMConfig):
+def make_decode_fn(cfg: LMConfig, ctx=None):
+    """``ctx``: optional QuantContext; a serve-mode context routes packed
+    dense layers through the fused W4A4 kernel (activation quant in-VMEM)."""
+
     def serve_step(params, caches, token, pos):
-        return decode_step(params, cfg, caches, token, pos)
+        return decode_step(params, cfg, caches, token, pos, ctx=ctx)
 
     return serve_step
 
@@ -141,11 +144,17 @@ def quantize_abstract(aparams) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def quantize_lm_for_serving(params, bits: int = 4, *, searched: bool = True):
-    """Pack quantizable LM weights to W4 (per-tensor or per-layer scale).
+def quantize_lm_for_serving(params, bits: int = 4, *, searched: bool = True,
+                            per_channel: bool = False):
+    """Pack quantizable LM weights to W4.
 
     ``searched=True`` runs the paper's MSE search per weight (Table 6
     spaces); False uses absmax scales (the cheap deployment default).
+    ``per_channel=True`` emits one scale per output channel: the searched
+    (or default E2M1) format is kept, but the grid maximum is refit per
+    column — ``maxval_c = absmax_c * (searched_maxval / absmax)`` — so
+    every column uses its full code range. The Pallas serving kernel
+    consumes the vector scale directly.
     """
     flat = flatten_paths(params)
     out = {}
@@ -160,11 +169,20 @@ def quantize_lm_for_serving(params, bits: int = 4, *, searched: bool = True):
             else:
                 qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, bits,
                                      jnp.max(jnp.abs(leaf)).astype(jnp.float32))
+            if per_channel:
+                absmax = jnp.maximum(jnp.max(jnp.abs(leaf)), 1e-8)
+                col = jnp.maximum(jnp.max(jnp.abs(leaf), axis=0), 1e-8)
+                mv = (col * (qp.maxval / absmax)).astype(jnp.float32)
+                qp = dataclasses.replace(qp, maxval=mv)
             out[path] = pack_weight(leaf, qp)
         else:
-            # stacked (G, ..., N): per-slice absmax scale, one packed array
-            red = tuple(range(1, leaf.ndim))
-            mv = jnp.max(jnp.abs(leaf), axis=red, keepdims=True).astype(jnp.float32)
+            # stacked (G, ..., N): per-slice absmax scale, one packed array;
+            # per_channel additionally keeps the output-channel axis, giving
+            # per-(slice, channel) scales of shape (G, 1, ..., N).
+            red = tuple(range(1, leaf.ndim - (1 if per_channel else 0)))
+            mv = jnp.maximum(
+                jnp.max(jnp.abs(leaf), axis=red, keepdims=True), 1e-8
+            ).astype(jnp.float32)
             qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, bits, mv)
             out[path] = pack_weight(leaf, qp)
     return unflatten_paths(out)

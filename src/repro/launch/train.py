@@ -19,7 +19,8 @@ from jax.sharding import NamedSharding
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs.registry import get_config
 from repro.data.synthetic import zipf_tokens
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               mesh_scope)
 from repro.launch.sharding import data_spec, param_shardings
 from repro.launch.steps import make_train_step
 from repro.models.lm import lm_init
@@ -51,7 +52,7 @@ def main(argv=None) -> None:
                       total_steps=args.steps)
     ckpt = CheckpointManager(os.path.join(args.ckpt_dir, cfg.name), keep=3)
 
-    with jax.set_mesh(mesh):
+    with mesh_scope(mesh):
         params = lm_init(jax.random.PRNGKey(0), cfg)
         ps = param_shardings(params, mesh)
         params = jax.tree.map(jax.device_put, params, ps)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.nn.embeddings import apply_rope
-from repro.nn.layers import dense_apply, dense_init
+from repro.nn.layers import dense_apply, dense_init, resolve_act_qp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,12 +49,16 @@ def attn_init(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:
     }
 
 
-def _qkv(p, x, cfg: AttnConfig, cos, sin, pos_offset=0, *, ctx=None, site=None):
+def _qkv(p, x, cfg: AttnConfig, cos, sin, pos_offset=0, *, ctx=None, site=None,
+         act_qps=None):
     b, s, _ = x.shape
     g = cfg.n_heads // cfg.n_kv
-    q = dense_apply(p["wq"], x, ctx=ctx, site=f"{site}/wq")
-    k = dense_apply(p["wk"], x, ctx=ctx, site=f"{site}/wk")
-    v = dense_apply(p["wv"], x, ctx=ctx, site=f"{site}/wv")
+    q = dense_apply(p["wq"], x, ctx=ctx, site=f"{site}/wq",
+                    act_qp=resolve_act_qp(act_qps, f"{site}/wq"))
+    k = dense_apply(p["wk"], x, ctx=ctx, site=f"{site}/wk",
+                    act_qp=resolve_act_qp(act_qps, f"{site}/wk"))
+    v = dense_apply(p["wv"], x, ctx=ctx, site=f"{site}/wv",
+                    act_qp=resolve_act_qp(act_qps, f"{site}/wv"))
     q = q.reshape(b, s, cfg.n_kv, g, cfg.head_dim)
     k = k.reshape(b, s, cfg.n_kv, cfg.head_dim)
     v = v.reshape(b, s, cfg.n_kv, cfg.head_dim)
@@ -75,11 +79,11 @@ def _mask(q_pos, k_pos, window):
 
 def attn_apply(p: dict, x: jnp.ndarray, cos, sin, cfg: AttnConfig, *,
                q_chunk: int = 512, unroll: bool = False, ctx=None,
-               site: str | None = None) -> jnp.ndarray:
+               site: str | None = None, act_qps=None) -> jnp.ndarray:
     """Causal (optionally windowed) self-attention over a full sequence."""
     b, s, _ = x.shape
     g = cfg.n_heads // cfg.n_kv
-    q, k, v = _qkv(p, x, cfg, cos, sin, ctx=ctx, site=site)
+    q, k, v = _qkv(p, x, cfg, cos, sin, ctx=ctx, site=site, act_qps=act_qps)
     scale = cfg.head_dim ** -0.5
     qc = min(q_chunk, s)
     assert s % qc == 0, (s, qc)
@@ -105,7 +109,8 @@ def attn_apply(p: dict, x: jnp.ndarray, cos, sin, cfg: AttnConfig, *,
     else:
         out = lax.map(one_chunk, jnp.arange(nc))      # (nc, b, qc, D)
     out = jnp.moveaxis(out, 0, 1).reshape(b, s, cfg.n_heads * cfg.head_dim)
-    return dense_apply(p["wo"], out, ctx=ctx, site=f"{site}/wo")
+    return dense_apply(p["wo"], out, ctx=ctx, site=f"{site}/wo",
+                       act_qp=resolve_act_qp(act_qps, f"{site}/wo"))
 
 
 # ---------------------------------------------------------------------------
@@ -173,7 +178,8 @@ def _kv_load(cache: dict, kv_dtype: str, dtype=jnp.bfloat16):
 
 def attn_decode(p: dict, x: jnp.ndarray, cache: dict, store_pos, valid_len,
                 cos_t, sin_t, cfg: AttnConfig, *, kv_dtype: str = "bf16",
-                ctx=None, site: str | None = None) -> tuple[jnp.ndarray, dict]:
+                ctx=None, site: str | None = None,
+                act_qps=None) -> tuple[jnp.ndarray, dict]:
     """One-token decode. x: (B, 1, D).
 
     ``store_pos``: cache slot for the new token (ring index for windowed
@@ -185,7 +191,8 @@ def attn_decode(p: dict, x: jnp.ndarray, cache: dict, store_pos, valid_len,
     """
     b = x.shape[0]
     g = cfg.n_heads // cfg.n_kv
-    q, k, v = _qkv(p, x, cfg, cos_t, sin_t, ctx=ctx, site=site)
+    q, k, v = _qkv(p, x, cfg, cos_t, sin_t, ctx=ctx, site=site,
+                   act_qps=act_qps)
     cache = _kv_store(cache, k, v, store_pos, kv_dtype)
     keys, vals = _kv_load(cache, kv_dtype, x.dtype)
     s_max = keys.shape[1]
@@ -199,4 +206,5 @@ def attn_decode(p: dict, x: jnp.ndarray, cache: dict, store_pos, valid_len,
     w = jax.nn.softmax(logits, axis=-1).astype(vals.dtype)
     o = jnp.einsum("bkgqs,bskh->bqkgh", w, vals)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
-    return dense_apply(p["wo"], o, ctx=ctx, site=f"{site}/wo"), cache
+    return dense_apply(p["wo"], o, ctx=ctx, site=f"{site}/wo",
+                       act_qp=resolve_act_qp(act_qps, f"{site}/wo")), cache

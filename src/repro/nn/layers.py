@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.qmodule import PackedW4, w4_dense_xla
-from repro.quant.calibrate import QuantContext, OFF
+from repro.quant.calibrate import (QuantContext, OFF,  # noqa: F401
+                                   resolve_act_qp)
 
 
 def _maybe_quant_act(ctx: QuantContext | None, site: str | None, x):
@@ -42,12 +43,18 @@ def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
 
 
 def dense_apply(p: dict, x: jnp.ndarray, *, ctx: QuantContext | None = None,
-                site: str | None = None) -> jnp.ndarray:
+                site: str | None = None, act_qp=None) -> jnp.ndarray:
+    """``act_qp`` (a ``QuantizerParams``) requests fused W4A4 serving: the
+    activation is MSFP-quantized inside the packed matmul kernel instead of
+    in a separate pass. It applies only to PackedW4 weights; a serve-mode
+    ``ctx`` can supply it per site when the caller doesn't."""
     x = _maybe_quant_act(ctx, site, x)
     w = p["w"]
     if isinstance(w, PackedW4):
         from repro.kernels import ops  # late import; kernels depend on nn types
-        y = ops.w4_matmul(x, w)
+        if act_qp is None and ctx is not None:
+            act_qp = ctx.serving_qp(site)  # site=None still gets the '*' qp
+        y = ops.w4a4_matmul(x, w, act_qp)
     else:
         y = x @ w.astype(x.dtype)
     if "b" in p:

@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.nn.layers import ACTIVATIONS, dense_apply, dense_init
+from repro.nn.layers import (ACTIVATIONS, dense_apply, dense_init,
+                             resolve_act_qp)
 
 
 def glu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
@@ -23,11 +24,17 @@ def glu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
 
 
 def glu_mlp_apply(p: dict, x: jnp.ndarray, *, act: str = "silu",
-                  ctx=None, site: str | None = None) -> jnp.ndarray:
+                  ctx=None, site: str | None = None,
+                  act_qps=None) -> jnp.ndarray:
     fn = ACTIVATIONS[act]
-    g = dense_apply(p["gate"], x, ctx=ctx, site=f"{site}/gate")
-    u = dense_apply(p["up"], x, ctx=ctx, site=f"{site}/up")
-    return dense_apply(p["down"], fn(g) * u, ctx=ctx, site=f"{site}/down")
+    g = dense_apply(p["gate"], x, ctx=ctx, site=f"{site}/gate",
+                    act_qp=resolve_act_qp(act_qps, f"{site}/gate"))
+    u = dense_apply(p["up"], x, ctx=ctx, site=f"{site}/up",
+                    act_qp=resolve_act_qp(act_qps, f"{site}/up"))
+    # ``down`` consumes act(gate)*up — the AAL site where MSFP picks the
+    # unsigned-with-zero-point activation format.
+    return dense_apply(p["down"], fn(g) * u, ctx=ctx, site=f"{site}/down",
+                       act_qp=resolve_act_qp(act_qps, f"{site}/down"))
 
 
 def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
@@ -39,10 +46,13 @@ def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
 
 
 def gelu_mlp_apply(p: dict, x: jnp.ndarray, *, act: str = "gelu",
-                   ctx=None, site: str | None = None) -> jnp.ndarray:
+                   ctx=None, site: str | None = None,
+                   act_qps=None) -> jnp.ndarray:
     fn = ACTIVATIONS[act]
-    h = fn(dense_apply(p["up"], x, ctx=ctx, site=f"{site}/up"))
-    return dense_apply(p["down"], h, ctx=ctx, site=f"{site}/down")
+    h = fn(dense_apply(p["up"], x, ctx=ctx, site=f"{site}/up",
+                       act_qp=resolve_act_qp(act_qps, f"{site}/up")))
+    return dense_apply(p["down"], h, ctx=ctx, site=f"{site}/down",
+                       act_qp=resolve_act_qp(act_qps, f"{site}/down"))
 
 
 def mlp_init(key, d_model, d_ff, kind: str, dtype=jnp.float32) -> dict:
@@ -51,9 +61,11 @@ def mlp_init(key, d_model, d_ff, kind: str, dtype=jnp.float32) -> dict:
     return gelu_mlp_init(key, d_model, d_ff, dtype)
 
 
-def mlp_apply(p, x, kind: str, *, ctx=None, site=None):
+def mlp_apply(p, x, kind: str, *, ctx=None, site=None, act_qps=None):
     if kind == "swiglu":
-        return glu_mlp_apply(p, x, act="silu", ctx=ctx, site=site)
+        return glu_mlp_apply(p, x, act="silu", ctx=ctx, site=site,
+                             act_qps=act_qps)
     if kind == "geglu":
-        return glu_mlp_apply(p, x, act="gelu_tanh", ctx=ctx, site=site)
-    return gelu_mlp_apply(p, x, ctx=ctx, site=site)
+        return glu_mlp_apply(p, x, act="gelu_tanh", ctx=ctx, site=site,
+                             act_qps=act_qps)
+    return gelu_mlp_apply(p, x, ctx=ctx, site=site, act_qps=act_qps)

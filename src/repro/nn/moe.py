@@ -212,15 +212,20 @@ def moe_apply_ep(p: dict, x: jnp.ndarray, cfg: MoEConfig, *,
                                    concat_axis=0, tiled=True)  # (E, c_l, d)
         return _combine_local(out_e, meta, xt_l.shape[0], d, xt_l.dtype)
 
-    from jax import shard_map
+    in_specs = (P(tok_axes, None), P(None, None), P(model_axis, None, None),
+                P(model_axis, None, None), P(model_axis, None, None))
+    try:
+        from jax import shard_map
+        sharded = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=P(tok_axes, None), check_vma=False)
+    except (ImportError, TypeError):
+        # older JAX: experimental home and/or the check_rep spelling
+        from jax.experimental.shard_map import shard_map
+        sharded = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=P(tok_axes, None), check_rep=False)
 
-    yt = shard_map(
-        local_fn, mesh=mesh,
-        in_specs=(P(tok_axes, None), P(None, None), P(model_axis, None, None),
-                  P(model_axis, None, None), P(model_axis, None, None)),
-        out_specs=P(tok_axes, None), check_vma=False,
-    )(xt, p["router"]["w"].astype(jnp.float32), p["w_gate"], p["w_up"],
-      p["w_down"])
+    yt = sharded(xt, p["router"]["w"].astype(jnp.float32), p["w_gate"],
+                 p["w_up"], p["w_down"])
 
     if "shared" in p:
         from repro.nn.mlp import glu_mlp_apply

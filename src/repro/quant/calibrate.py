@@ -90,14 +90,21 @@ class QuantContext:
     mode='off'      : identity at every quant site (full-precision run).
     mode='collect'  : record activation samples into a CalibrationDB.
     mode='quantize' : apply the searched fake-quantizers (from a QuantPlan).
+    mode='serve'    : activation quant happens *inside* the fused W4A4
+                      Pallas kernel — ``act`` is identity here, and packed
+                      dense layers fetch their per-site QuantizerParams via
+                      ``serving_qp``. ``act_qps`` maps site -> params; the
+                      key ``"*"`` is the fallback for unlisted sites.
     """
 
     def __init__(self, mode: str = "off", db: CalibrationDB | None = None,
-                 plan=None, act_fn: Callable | None = None):
-        assert mode in ("off", "collect", "quantize")
+                 plan=None, act_fn: Callable | None = None,
+                 act_qps: dict | None = None):
+        assert mode in ("off", "collect", "quantize", "serve")
         self.mode = mode
         self.db = db
         self.plan = plan
+        self.act_qps = act_qps or {}
         self._act_fn = act_fn  # injected by core.msfp to avoid cyclic import
 
     def act(self, name: str, x):
@@ -107,6 +114,23 @@ class QuantContext:
         if self.mode == "quantize" and self.plan is not None:
             return self._act_fn(name, x, self.plan)
         return x
+
+    def serving_qp(self, name: str):
+        """Per-site activation quantizer for the fused serving kernel."""
+        if self.mode != "serve":
+            return None
+        return resolve_act_qp(self.act_qps, name)
+
+
+def resolve_act_qp(act_qps, name: str | None):
+    """Site lookup in an ``act_qps`` mapping; ``"*"`` is the wildcard
+    default. Shared by QuantContext.serving_qp and the explicit ``act_qps``
+    threading through the nn layers."""
+    if not act_qps:
+        return None
+    if name is None:
+        return act_qps.get("*")
+    return act_qps.get(name, act_qps.get("*"))
 
 
 OFF = QuantContext("off")

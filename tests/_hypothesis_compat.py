@@ -1,0 +1,89 @@
+"""Drop-in subset of hypothesis for environments without it installed.
+
+The real library is used when importable. The fallback reimplements just
+what this suite needs — ``@given`` over ``integers`` / ``floats`` /
+``booleans`` / ``lists`` / ``sampled_from`` strategies plus ``@settings`` —
+as a deterministic seeded sweep (seeded per test name, so failures
+reproduce). Property tests keep running everywhere; shrinking and the
+example database are hypothesis-only luxuries.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies  # noqa: F401
+except ImportError:
+    import random
+    import zlib
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+            def draw(r):
+                # Hit the endpoints early — they are the classic edge cases.
+                roll = r.random()
+                if roll < 0.05:
+                    return float(min_value)
+                if roll < 0.10:
+                    return float(max_value)
+                return r.uniform(min_value, max_value)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda r: [elements.example(r)
+                                        for _ in range(r.randint(min_size,
+                                                                 max_size))])
+
+        @staticmethod
+        def sampled_from(choices):
+            seq = list(choices)
+            return _Strategy(lambda r: r.choice(seq))
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — the wrapper must present a
+            # zero-argument signature or pytest tries to resolve the
+            # strategy parameters as fixtures.
+            def wrapper():
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for _ in range(n):
+                    drawn = [s.example(rng) for s in arg_strategies]
+                    drawn_kw = {k: s.example(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*drawn, **drawn_kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples",
+                                            _DEFAULT_MAX_EXAMPLES)
+            return wrapper
+
+        return deco

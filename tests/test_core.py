@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 import repro.core as core
 from repro.common.tree import flatten_paths, unflatten_paths
@@ -19,6 +19,7 @@ def _fake_db(rng):
     return db
 
 
+@pytest.mark.slow
 def test_plan_modes_and_classification(rng):
     db = _fake_db(rng)
     weights = {"mlp/down/w": rng.normal(size=(32, 16)).astype(np.float32),
@@ -35,6 +36,7 @@ def test_plan_modes_and_classification(rng):
     assert all(s.qp.kind == 2 for s in plan_i.sites.values())
 
 
+@pytest.mark.slow
 def test_mixed_io_bits(rng):
     db = _fake_db(rng)
     weights = {"mlp/down/w": rng.normal(size=(8, 8)).astype(np.float32),
@@ -95,6 +97,7 @@ def test_dfa_weighting():
     assert float(core.plain_loss(eps1, eps2)) == pytest.approx(1.0)
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(e=st.integers(0, 3), m=st.integers(0, 3), signed=st.booleans(),
        rows=st.integers(1, 9), cols=st.sampled_from([2, 4, 8, 16]))

@@ -47,6 +47,7 @@ def test_sample_timesteps_descending_unique():
     assert len(seq) == 20 and np.all(np.diff(seq) < 0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("sampler", ["ddim", "plms", "dpm_solver2"])
 def test_samplers_run_on_tiny_unet(sampler):
     cfg = tiny_ddim(8)
@@ -61,6 +62,7 @@ def test_samplers_run_on_tiny_unet(sampler):
     assert x.shape == (2, 8, 8, 3) and bool(jnp.isfinite(x).all())
 
 
+@pytest.mark.slow
 def test_unet_class_conditional():
     cfg = tiny_ddim(8)
     import dataclasses
@@ -80,6 +82,7 @@ def test_lora_target_sites_cover_all_weights():
     assert len(sites) > 20
 
 
+@pytest.mark.slow
 def test_quantize_diffusion_pipeline_end_to_end():
     """calibrate -> plan -> fake-quant -> TALoRA bundle -> sample."""
     from repro.core.talora import TALoRAConfig

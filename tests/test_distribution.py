@@ -50,6 +50,7 @@ def test_param_shardings_rules_unit():
     assert param_spec("final_norm/g", (64,), m) == P()
 
 
+@pytest.mark.slow
 def test_train_step_compiles_sharded_8dev():
     out = run_py("""
         import jax, jax.numpy as jnp
@@ -59,11 +60,11 @@ def test_train_step_compiles_sharded_8dev():
         from repro.launch.steps import (make_train_step, abstract_params,
                                         abstract_opt, input_specs)
         from repro.optim.adam import AdamConfig
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh, mesh_scope
+        mesh = compat_make_mesh((4, 2), ("data", "model"))
         cfg = get_config("qwen1.5-0.5b", smoke=True)
         acfg = AdamConfig()
-        with jax.set_mesh(mesh):
+        with mesh_scope(mesh):
             ap = abstract_params(cfg)
             ao = abstract_opt(ap, acfg)
             ps = param_shardings(ap, mesh)
@@ -75,12 +76,14 @@ def test_train_step_compiles_sharded_8dev():
                          out_shardings=(ps, os_, None)) \\
                 .lower(ap, ao, {"tokens": tokens}).compile()
             ca = co.cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else ca  # old JAX: list of dicts
             print("FLOPS", ca.get("flops", -1) > 0)
             print("OK")
     """)
     assert "OK" in out and "FLOPS True" in out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["zamba2-2.7b", "kimi-k2-1t-a32b"])
 def test_decode_step_compiles_sharded_8dev(arch):
     out = run_py(f"""
@@ -92,11 +95,11 @@ def test_decode_step_compiles_sharded_8dev(arch):
                                            data_spec)
         from repro.launch.steps import (abstract_params, input_specs,
                                         make_decode_fn, quantize_abstract)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh, mesh_scope
+        mesh = compat_make_mesh((4, 2), ("data", "model"))
         cfg = get_config("{arch}", smoke=True)
         shape = ShapeSpec("d", 32, 8, "decode")
-        with jax.set_mesh(mesh):
+        with mesh_scope(mesh):
             ap = quantize_abstract(abstract_params(cfg))
             ps = param_shardings(ap, mesh)
             specs = input_specs(cfg, shape)
@@ -107,21 +110,23 @@ def test_decode_step_compiles_sharded_8dev(arch):
                          out_shardings=(None, cs)) \\
                 .lower(ap, specs["caches"], specs["token"],
                        specs["pos"]).compile()
-            print("OK", co.cost_analysis().get("flops", 0) > 0)
+            ca = co.cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else ca
+            print("OK", ca.get("flops", 0) > 0)
     """)
     assert "OK True" in out
 
 
+@pytest.mark.slow
 def test_checkpoint_restore_onto_different_mesh():
     """Elasticity: save sharded on (4,2), restore onto (2,4)."""
     out = run_py("""
         import tempfile, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint.ckpt import CheckpointManager
-        m1 = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
-        m2 = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        m1 = compat_make_mesh((4, 2), ("data", "model"))
+        m2 = compat_make_mesh((2, 4), ("data", "model"))
         tree = {"w": jnp.arange(64.0).reshape(8, 8)}
         sh1 = {"w": NamedSharding(m1, P("data", "model"))}
         sh2 = {"w": NamedSharding(m2, P("data", "model"))}
@@ -138,20 +143,21 @@ def test_checkpoint_restore_onto_different_mesh():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_moe_expert_parallel_matches_global():
     """shard_map EP dispatch == global-sort dispatch (no-drop capacity)."""
     out = run_py("""
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.nn.moe import MoEConfig, moe_init, moe_apply, moe_apply_ep
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh, mesh_scope
+        mesh = compat_make_mesh((4, 2), ("data", "model"))
         cfg = MoEConfig(d_model=32, d_ff=16, n_experts=4, top_k=2,
                         n_shared=1, capacity_factor=8.0)
         key = jax.random.PRNGKey(0)
         p = moe_init(key, cfg, jnp.float32)
         x = jax.random.normal(key, (8, 6, 32))
-        with jax.set_mesh(mesh):
+        with mesh_scope(mesh):
             xg = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
             y_g = jax.jit(lambda p, x: moe_apply(p, x, cfg))(p, xg)
             y_e = jax.jit(lambda p, x: moe_apply_ep(p, x, cfg))(p, xg)

@@ -66,6 +66,215 @@ def test_w4_matmul_kernel_matches_ref(m, k, n, fmt, rng):
                                atol=2e-1, rtol=2e-2)
 
 
+# ---------------------------------------------------------------------------
+# full-format-space W4 paths: per-channel scale, unsigned+zp, fused W4A4
+# ---------------------------------------------------------------------------
+
+
+def _pack_per_channel(w, e, m, rng):
+    mv = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-6).astype(jnp.float32)
+    qp = QuantizerParams(KIND_FP_SIGNED, e, m, 4, mv)
+    return pack_weight(w, qp)
+
+
+def _pack_unsigned(w, e, m, zp=-0.15):
+    mv = jnp.float32(float(jnp.max(w - zp)))
+    qp = QuantizerParams(KIND_FP_UNSIGNED, e, m, 4, mv, jnp.float32(zp))
+    return pack_weight(w, qp)
+
+
+@pytest.mark.parametrize("m,k,n", [(7, 96, 64), (33, 130, 66), (257, 511, 64),
+                                   (33, 257, 514)])
+@pytest.mark.parametrize("fmt", [(2, 1), (1, 2)], ids=str)
+def test_w4_matmul_per_channel_matches_ref(m, k, n, fmt, rng):
+    e, mm = fmt
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    pw = _pack_per_channel(w, e, mm, rng)
+    assert pw.scale.shape == (n,)
+    # small-magnitude x keeps f32 dot-reassociation noise under the atol
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)) * 0.02
+    out = ops.w4_matmul(x, pw)
+    want = ref.ref_w4_matmul(x, pw, jnp.float32)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-6, rtol=5e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(7, 96, 64), (33, 130, 66), (257, 511, 64)])
+@pytest.mark.parametrize("fmt", [(2, 2), (1, 3), (0, 4)], ids=str)
+def test_w4_matmul_unsigned_zp_matches_ref(m, k, n, fmt, rng):
+    e, mm = fmt
+    # SiLU-like AAL weights: mostly positive with a shallow negative tail.
+    w = jnp.asarray(np.abs(rng.normal(size=(k, n))).astype(np.float32) - 0.15)
+    pw = _pack_unsigned(w, e, mm)
+    assert not pw.signed
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)) * 0.02
+    out = ops.w4_matmul(x, pw)
+    want = ref.ref_w4_matmul(x, pw, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-6, rtol=5e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(7, 96, 64), (33, 130, 66), (257, 511, 64)])
+@pytest.mark.parametrize("act_kind,act_e,act_m",
+                         [(KIND_FP_SIGNED, 2, 1), (KIND_FP_UNSIGNED, 2, 2)])
+def test_w4a4_fused_matches_qdq_then_matmul(m, k, n, act_kind, act_e, act_m,
+                                            rng):
+    qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.5))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    pw = pack_weight(w, qp)
+    act_qp = QuantizerParams(
+        act_kind, act_e, act_m, 4, jnp.float32(2.3),
+        jnp.float32(-0.15 if act_kind == KIND_FP_UNSIGNED else 0.0))
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)) * 0.02
+    out = ops.w4a4_matmul(x, pw, act_qp)
+    want = ref.ref_w4a4_matmul(x, pw, act_qp, jnp.float32)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-6, rtol=5e-4)
+
+
+def test_w4a4_fused_unsigned_act_with_padded_k(rng):
+    """K > bk-multiple forces zero-padding of x; unsigned act quant maps
+    those zeros to qdq(0) != 0, which must not leak into the dot or the
+    weight zero-point rowsum correction (regression)."""
+    m, k, n = 5, 600, 32  # bk=512 -> padded to 1024: 424 phantom K rows
+    wu = jnp.abs(jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))) - 0.15
+    pw = _pack_unsigned(wu, 2, 2)
+    act_qp = QuantizerParams(KIND_FP_UNSIGNED, 2, 2, 4, jnp.float32(2.3),
+                             jnp.float32(-0.15))
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)) * 0.02
+    out = ops.w4a4_matmul(x, pw, act_qp)
+    want = ref.ref_w4a4_matmul(x, pw, act_qp, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=5e-4)
+
+
+def test_w4a4_fused_per_channel_unsigned_weight_bf16(rng):
+    """The full stack at once: unsigned per-channel weights, fused act
+    quant, bf16 activations, odd/padded shapes."""
+    k, n = 130, 66
+    # O(1)-scaled data keeps outputs within bf16 ulp ~4e-3 of the oracle.
+    w = jnp.asarray(np.abs(rng.normal(size=(k, n))).astype(np.float32)
+                    * 0.1 - 0.01)
+    mv = jnp.maximum(jnp.max(w + 0.01, axis=0), 1e-6).astype(jnp.float32)
+    qp = QuantizerParams(KIND_FP_UNSIGNED, 2, 2, 4, mv,
+                         jnp.broadcast_to(jnp.float32(-0.01), mv.shape))
+    pw = pack_weight(w, qp)
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(1.0))
+    x = jnp.asarray(rng.normal(size=(29, k)).astype(np.float32) * 0.3
+                    ).astype(jnp.bfloat16)
+    out = ops.w4a4_matmul(x, pw, act_qp)
+    want = ref.ref_w4a4_matmul(x, pw, act_qp, jnp.bfloat16)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=1e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_w4_matmul_per_channel_dtypes(dtype, rng):
+    w = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32)) * 0.1
+    pw = _pack_per_channel(w, 2, 1, rng)
+    x = jnp.asarray(rng.normal(size=(17, 96)).astype(np.float32)
+                    * 0.3).astype(dtype)
+    out = ops.w4_matmul(x, pw)
+    want = ref.ref_w4_matmul(x, pw, dtype)
+    assert out.dtype == dtype
+    atol = 1e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=2e-2)
+
+
+def test_w4_dispatch_covers_full_format_space(monkeypatch, rng):
+    """Vector-scale and unsigned PackedW4 must hit the Pallas kernel, not
+    the XLA decode-then-dot fallback."""
+
+    def boom(*a, **k):
+        raise AssertionError("w4_matmul fell back to the XLA path")
+
+    monkeypatch.setattr(ops._ref, "ref_w4_matmul", boom)
+    monkeypatch.setattr(ops._ref, "ref_w4a4_matmul", boom)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+
+    pc = _pack_per_channel(w, 2, 1, rng)
+    assert ops.w4_matmul(x, pc).shape == (4, 16)
+
+    un = _pack_unsigned(jnp.abs(w) - 0.1, 2, 2)
+    assert ops.w4_matmul(x, un).shape == (4, 16)
+
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+    assert ops.w4a4_matmul(x, pc, act_qp).shape == (4, 16)
+
+    # stacked packs (scanned layers) are the documented remaining fallback
+    monkeypatch.undo()
+    from repro.core.qmodule import PackedW4
+    stacked = PackedW4(jnp.zeros((2, 32, 8), jnp.uint8),
+                       jnp.ones((2, 1, 1)), jnp.zeros((2, 1, 1)),
+                       2, 1, True, (2, 32, 16))
+    assert not ops._pallas_w4_ok(stacked)
+
+
+def test_dense_apply_serve_ctx_routes_to_fused_kernel(monkeypatch, rng):
+    """A serve-mode QuantContext must hand packed dense layers their
+    activation params so they take the fused W4A4 path."""
+    from repro.nn.layers import dense_apply
+    from repro.quant.calibrate import QuantContext
+
+    qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    pw = pack_weight(w, QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
+                                        jnp.float32(2.5)))
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    seen = {}
+    real = ops.w4a4_matmul
+
+    def spy(x_, pw_, act_qp_):
+        seen["act_qp"] = act_qp_
+        return real(x_, pw_, act_qp_)
+
+    monkeypatch.setattr(ops, "w4a4_matmul", spy)
+    ctx = QuantContext("serve", act_qps={"*": qp})
+    out = dense_apply({"w": pw}, x, ctx=ctx, site="mlp/down")
+    assert out.shape == (4, 16)
+    assert seen["act_qp"] is qp
+    # off-mode ctx leaves act_qp unset -> plain w4 path
+    seen.clear()
+    dense_apply({"w": pw}, x, ctx=QuantContext("off"), site="mlp/down")
+    assert seen["act_qp"] is None
+
+
+def test_mlp_apply_act_qps_threading(monkeypatch, rng):
+    """Explicit act_qps mapping (site-keyed with '*' fallback) reaches the
+    fused kernel through mlp_apply's dense call sites."""
+    from repro.nn.mlp import mlp_apply
+
+    d, f = 16, 32
+    qp_down = QuantizerParams(KIND_FP_UNSIGNED, 2, 2, 4, jnp.float32(2.0),
+                              jnp.float32(-0.15))
+    qp_any = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(3.0))
+    wqp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+    p = {name: {"w": pack_weight(
+            jnp.asarray(rng.normal(size=shape).astype(np.float32)), wqp)}
+         for name, shape in (("gate", (d, f)), ("up", (d, f)),
+                             ("down", (f, d)))}
+    calls = []
+    real = ops.w4a4_matmul
+
+    def spy(x_, pw_, act_qp_):
+        calls.append(act_qp_)
+        return real(x_, pw_, act_qp_)
+
+    monkeypatch.setattr(ops, "w4a4_matmul", spy)
+    x = jnp.asarray(rng.normal(size=(3, d)).astype(np.float32))
+    out = mlp_apply(p, x, "swiglu", site="mlp",
+                    act_qps={"mlp/down": qp_down, "*": qp_any})
+    assert out.shape == (3, d)
+    assert calls == [qp_any, qp_any, qp_down]  # gate, up, down
+
+
 def test_w4_matmul_3d_input(rng):
     qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(1.0))
     w = jnp.asarray(rng.normal(size=(32, 48)).astype(np.float32))

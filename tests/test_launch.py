@@ -62,6 +62,29 @@ def test_quantize_abstract_marks_only_big_weights():
     assert isinstance(qt["embed"], jax.ShapeDtypeStruct)
 
 
+def test_quantize_for_serving_per_channel_scales():
+    """per_channel=True must produce channel-resolved scales for both 2D
+    and stacked (scanned) weights, and stay numerically close to dense."""
+    from repro.launch.steps import quantize_lm_for_serving
+
+    key = jax.random.PRNGKey(0)
+    w2d = jax.random.normal(key, (16, 8))
+    w3d = jax.random.normal(key, (3, 16, 8))  # (groups, in, out)
+    params = {"attn": {"wq": {"w": w2d}}, "blocks": [{"mlp": {"down": {"w": w3d}}}]}
+    q = quantize_lm_for_serving(params, searched=False, per_channel=True)
+    pq = q["attn"]["wq"]["w"]
+    assert isinstance(pq, PackedW4) and pq.scale.shape == (8,)
+    ps = q["blocks"][0]["mlp"]["down"]["w"]
+    assert isinstance(ps, PackedW4) and ps.scale.shape == (3, 1, 8)
+    # per-channel dequant error <= per-tensor dequant error (same format)
+    from repro.core.qmodule import dequant_weight
+    qt = quantize_lm_for_serving(params, searched=False, per_channel=False)
+    err_pc = float(jnp.mean((dequant_weight(ps, jnp.float32) - w3d) ** 2))
+    err_pt = float(jnp.mean((dequant_weight(
+        qt["blocks"][0]["mlp"]["down"]["w"], jnp.float32) - w3d) ** 2))
+    assert err_pc <= err_pt + 1e-9
+
+
 def test_with_depth_preserves_period():
     cfg = get_config("gemma3-27b")
     c1 = with_depth(cfg, 1)
@@ -69,6 +92,7 @@ def test_with_depth_preserves_period():
     assert c1.n_layers == cfg.first_k_dense + cfg.period
 
 
+@pytest.mark.slow
 def test_grad_accum_matches_single_step():
     cfg = get_config("smollm-135m", smoke=True)
     p = lm_init(KEY, cfg)

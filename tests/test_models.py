@@ -19,6 +19,7 @@ def _inputs(cfg):
     return toks, extra
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_arch_smoke_forward_and_decode(arch):
     """(f) reduced config: one forward + one decode, shapes + no NaNs."""
@@ -39,6 +40,7 @@ def test_arch_smoke_forward_and_decode(arch):
 
 @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "gemma3-27b", "mamba2-370m",
                                   "zamba2-2.7b", "kimi-k2-1t-a32b"])
+@pytest.mark.slow
 def test_arch_train_step_decreases_loss(arch):
     from repro.optim.adam import AdamConfig, adam_init, adam_update
     cfg = get_config(arch, smoke=True)
@@ -83,6 +85,7 @@ def test_arch_train_step_decreases_loss(arch):
                      moe_d_ff=32, capacity_factor=4.0, dtype=jnp.float32,
                      q_chunk=4)),
 ])
+@pytest.mark.slow
 def test_decode_matches_forward(name, cfg):
     """The strongest invariant: stepwise decode == full causal forward."""
     p = lm_init(KEY, cfg)
@@ -99,6 +102,7 @@ def test_decode_matches_forward(name, cfg):
     assert err < 2e-2, err
 
 
+@pytest.mark.slow
 def test_unroll_mode_matches_scan():
     import dataclasses
     cfg = LMConfig("t", n_layers=4, d_model=32, n_heads=4, n_kv=2, d_ff=64,
@@ -110,6 +114,7 @@ def test_unroll_mode_matches_scan():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ring_buffer_window_decode_long_context():
     """Windowed layer decoding past the window: ring cache still matches
 

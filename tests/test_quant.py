@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.quant import (FPFormat, QuantizerParams, KIND_FP_SIGNED,
                          KIND_FP_UNSIGNED, fp_qdq, int_qdq,
@@ -30,6 +30,7 @@ def test_snap_matches_bruteforce_nearest(fmt, rng):
     np.testing.assert_allclose(err_s, err_b, atol=1e-6)
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(e=st.integers(0, 3), m=st.integers(0, 3),
        signed=st.booleans(),

@@ -115,6 +115,7 @@ def test_trainer_exceeds_max_restarts():
             tr.run({"x": jnp.zeros(())}, iter(lambda: 1.0, None))
 
 
+@pytest.mark.slow
 def test_trainer_straggler_detection():
     with tempfile.TemporaryDirectory() as d:
         cm = CheckpointManager(d, keep=2)
@@ -155,6 +156,7 @@ def test_trainer_preemption_stop_saves():
         assert cm.latest_step() == len(hist)
 
 
+@pytest.mark.slow
 def test_synthetic_data_shapes_and_determinism():
     img = gaussian_bump_images(KEY, 4, 16)
     assert img.shape == (4, 16, 16, 3)
