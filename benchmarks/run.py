@@ -15,7 +15,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: t1,t4,t5,t7,fig3,fig4,kernels")
+                    help="comma list: t1,t4,t5,t7,fig3,fig4,kernels,serving")
     ap.add_argument("--retrain", action="store_true")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -34,6 +34,10 @@ def main() -> None:
     if want("kernels"):
         print("## kernels (name,us_per_call,derived)")
         results["kernels"] = kernel_bench.rows()
+    if want("serving"):
+        from benchmarks import serving_bench
+        print("## serving (name,us_per_call,derived)")
+        results["serving"] = serving_bench.rows()
     if want("fig4"):
         print("## fig4: AAL strategies (paper: unsigned+zp improves >95%)")
         results["fig4"] = paper_tables.fig4_aal_strategies()
@@ -54,8 +58,19 @@ def main() -> None:
         results["table4"] = paper_tables.table4_ablation()
 
     os.makedirs("experiments", exist_ok=True)
-    with open("experiments/bench_results.json", "w") as f:
-        json.dump(results, f, indent=1, default=float)
+    # merge into existing results so `--only <section>` runs don't drop the
+    # other sections' rows
+    path = "experiments/bench_results.json"
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(results)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1, default=float)
     print(f"# total {time.time() - t0:.0f}s -> experiments/bench_results.json")
 
 

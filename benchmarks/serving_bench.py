@@ -1,0 +1,95 @@
+"""Serving-engine benchmark: continuous-batched denoising on packed W4A4.
+
+Replays a burst of concurrent generation requests through the diffusion
+serving engine (tiny UNet, XLA packed path on CPU) and emits rows under
+the kernel-bench JSON conventions (name, us_per_call, derived) — the
+derived column carries throughput and segment-cache hit rate, plus a
+cold-vs-warm row for the weight bank's merge+pack build.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timer
+from repro.core import talora
+from repro.configs.diffusion_presets import tiny_ddim
+from repro.diffusion.schedule import make_schedule
+from repro.nn.unet import io_sites, unet_init
+from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
+from repro.serving import (DiffusionServingEngine, WeightBank,
+                           absmax_talora_setup)
+
+IMG = 8
+T = 50
+N_REQ = 6
+STEPS = 4
+
+
+def _setup(key):
+    cfg = tiny_ddim(IMG)
+    sched = make_schedule("linear", T)
+    params = unet_init(key, cfg)
+    tcfg = talora.TALoRAConfig(hub_size=2, rank=4, t_emb_dim=32,
+                               router_hidden=16)
+    plan, hubs, router = absmax_talora_setup(params, tcfg, key,
+                                             io_sites=io_sites(params))
+    return cfg, sched, params, plan, hubs, router, tcfg
+
+
+def rows(log=print) -> list[dict]:
+    out = []
+    key = jax.random.PRNGKey(0)
+    cfg, sched, params, plan, hubs, router, tcfg = _setup(key)
+
+    # weight bank build: cold merge+pack vs warm LRU hit
+    bank = WeightBank(params, plan, hubs, router, tcfg, T, max_cached=4)
+    t0 = time.perf_counter()
+    jax.block_until_ready(jax.tree.leaves(bank.params_for_segment(0)))
+    cold_us = (time.perf_counter() - t0) * 1e6
+    warm_us = timer(lambda: bank.params_for_segment(0))
+    out.append({"name": f"weight_bank_build_seg_{len(plan.sites)}sites",
+                "us_per_call": cold_us,
+                "derived": f"warm LRU hit {warm_us:.0f}us "
+                           f"({cold_us / max(warm_us, 1e-9):.0f}x); "
+                           f"{bank.n_segments} segments"})
+
+    # continuous-batched serving: N concurrent requests, mixed steps
+    bank = WeightBank(params, plan, hubs, router, tcfg, T,
+                      max_cached=bank.n_segments)  # perf run: no evictions
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(6.0))
+    engine = DiffusionServingEngine(cfg, sched, bank,
+                                    act_qps={"*": act_qp}, max_batch=N_REQ)
+    for i in range(N_REQ):
+        engine.submit(steps=STEPS + i % 2, seed=i,
+                      sampler="ddim" if i % 2 == 0 else "plms")
+    t0 = time.perf_counter()
+    results = engine.run()
+    wall = time.perf_counter() - t0
+    s = engine.stats()
+    evals = sum(rs.n_evals for rs in results.values())
+    out.append({"name": f"serving_engine_{N_REQ}req_tiny_ddim{IMG}",
+                "us_per_call": wall * 1e6 / max(evals, 1),
+                "derived": f"{N_REQ / wall:.2f} req/s; segment-cache "
+                           f"hit-rate {s['bank_hit_rate']:.2f}; mean batch "
+                           f"{s['mean_batch']:.2f}; {s['forwards']} fwd"})
+
+    # single-request baseline (no batching win, same packed path)
+    bank1 = WeightBank(params, plan, hubs, router, tcfg, T,
+                       max_cached=bank.n_segments)
+    eng1 = DiffusionServingEngine(cfg, sched, bank1, act_qps={"*": act_qp},
+                                  max_batch=1)
+    eng1.submit(steps=STEPS, seed=0)
+    t0 = time.perf_counter()
+    res1 = eng1.run()
+    wall1 = time.perf_counter() - t0
+    evals1 = sum(rs.n_evals for rs in res1.values())
+    out.append({"name": "serving_engine_1req_tiny_ddim8_ref",
+                "us_per_call": wall1 * 1e6 / max(evals1, 1),
+                "derived": "per-eval baseline (batch=1)"})
+
+    for r in out:
+        log(f"  {r['name']},{r['us_per_call']:.0f}us,{r['derived']}")
+    return out

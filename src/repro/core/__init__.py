@@ -5,7 +5,8 @@ from repro.core.msfp import (QuantPlan, SiteInfo, build_plan, build_mixed_plan,
 from repro.core.talora import (TALoRAConfig, init_lora_hub, init_router,
                                router_logits, ste_one_hot, route, lora_delta,
                                lora_apply, merged_weight, allocation_histogram,
-                               lora_target_dims_from_weights, merge_into_tree)
+                               lora_target_dims_from_weights, merge_into_tree,
+                               routing_signatures)
 from repro.core.dfa import (denoising_factor, dfa_loss, plain_loss, eps_mse,
                             denoising_gap)
 from repro.core.qmodule import (PackedW4, pack_weight, dequant_weight,

@@ -152,6 +152,25 @@ def merge_into_tree(params: dict, hubs: dict[str, dict],
     return unflatten_paths(flat)
 
 
+def routing_signatures(router: dict, timesteps: jnp.ndarray,
+                       layer_names: list[str],
+                       cfg: TALoRAConfig) -> jnp.ndarray:
+    """(T, n_layers) int32 hard slot selection per timestep.
+
+    The router is a deterministic function of t, so this sweep defines the
+    contiguous timestep *segments* with identical routing — the unit the
+    serving weight bank pre-merges and pre-packs (one merged LoRA per
+    segment, App. E's deployment cost argument).
+    """
+    n = len(layer_names)
+
+    def per_t(t):
+        return jnp.argmax(router_logits(router, t, n, cfg), axis=-1)
+
+    return jax.vmap(per_t)(jnp.asarray(timesteps, jnp.float32)).astype(
+        jnp.int32)
+
+
 def allocation_histogram(router: dict, timesteps: jnp.ndarray,
                          layer_names: list[str],
                          cfg: TALoRAConfig) -> jnp.ndarray:

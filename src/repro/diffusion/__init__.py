@@ -1,4 +1,7 @@
 """Diffusion substrate: schedules, samplers, quantization pipeline."""
 from repro.diffusion.schedule import NoiseSchedule, make_schedule, sample_timesteps
 from repro.diffusion.samplers import (ddim_sample, ddim_step, plms_sample,
-                                      dpm_solver2_sample, SAMPLERS)
+                                      dpm_solver2_sample, SAMPLERS,
+                                      SamplerState, sampler_init,
+                                      sampler_needed_t, sampler_advance,
+                                      STEP_SAMPLERS)

@@ -41,18 +41,56 @@ class QuantizedDiffusion:
         return unet_apply(self.fp_params, x, t, self.cfg, y=y)
 
     def student_eps(self, x, t, y=None, hubs=None, router=None):
-        """Quantized forward; TALoRA merged for the (scalar-equal) batch t."""
+        """Quantized forward; TALoRA merged per distinct batch timestep.
+
+        The router selects adapters per *timestep*, so a batch mixing
+        timesteps cannot share one merged weight set. Concrete mixed-``t``
+        batches are routed per-t group (merge + forward per group,
+        scattered back in order); under tracing the values are invisible,
+        so batches larger than one raise instead of silently merging for
+        ``t[0]`` (the serving engine batches per routing segment and is
+        the jit-friendly path).
+        """
         hubs = hubs if hubs is not None else self.hubs
         router = router if router is not None else self.router
-        params = self.q_params
-        if hubs is not None and router is not None:
-            names = sorted(hubs)
-            sels = talora.route(router, t.reshape(-1)[0], names,
-                                self.talora_cfg)
-            params = talora.merge_into_tree(params, hubs, sels, self.talora_cfg)
         ctx = QuantContext("quantize", plan=self.plan,
                           act_fn=msfp.quantize_act)
-        return unet_apply(params, x, t, self.cfg, y=y, ctx=ctx)
+        if hubs is None or router is None:
+            return unet_apply(self.q_params, x, t, self.cfg, y=y, ctx=ctx)
+
+        names = sorted(hubs)
+        t_flat = jnp.reshape(jnp.asarray(t), (-1,))
+
+        def merged_for(t_scalar):
+            sels = talora.route(router, t_scalar, names, self.talora_cfg)
+            return talora.merge_into_tree(self.q_params, hubs, sels,
+                                          self.talora_cfg)
+
+        if isinstance(t_flat, jax.core.Tracer):
+            if t_flat.shape[0] > 1:
+                raise ValueError(
+                    "student_eps under jit cannot verify that a batched t "
+                    "is single-timestep; trace with batch size 1 or serve "
+                    "mixed timesteps through repro.serving (per-segment "
+                    "weight bank)")
+            return unet_apply(merged_for(t_flat[0]), x, t, self.cfg, y=y,
+                              ctx=ctx)
+
+        t_vals = np.asarray(t_flat)
+        uniq = np.unique(t_vals)
+        if uniq.size <= 1:
+            return unet_apply(merged_for(t_flat[0]), x, t, self.cfg, y=y,
+                              ctx=ctx)
+        out = None
+        for tv in uniq:
+            idx = np.nonzero(t_vals == tv)[0]
+            eps = unet_apply(merged_for(jnp.float32(tv)), x[idx], t_flat[idx],
+                             self.cfg, y=None if y is None else y[idx],
+                             ctx=ctx)
+            out = jnp.zeros((x.shape[0],) + eps.shape[1:], eps.dtype) \
+                if out is None else out
+            out = out.at[idx].set(eps)
+        return out
 
 
 def build_calibration_set(fp_params, cfg: UNetConfig, sched: NoiseSchedule,

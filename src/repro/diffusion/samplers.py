@@ -3,9 +3,25 @@
 All samplers take ``eps_fn(x_t, t) -> eps`` so the same code drives the FP
 teacher, the fake-quant student, and the TALoRA-merged student (the
 pipeline builds the eps_fn closure per configuration).
+
+Two equivalent surfaces:
+
+  * Loop samplers (``ddim_sample`` / ``plms_sample`` / ``dpm_solver2_sample``)
+    own the denoising loop — the classic offline API.
+  * The step-wise API (``sampler_init`` / ``sampler_needed_t`` /
+    ``sampler_advance``) inverts control: a ``SamplerState`` is an
+    eps-request machine that announces the timestep it needs evaluated
+    next (``sampler_needed_t``), exposes the state to evaluate at
+    (``state.eval_x`` — for DPM-Solver-2's midpoint this is the
+    intermediate ``u``, not ``x``), and consumes the result
+    (``sampler_advance``). The serving engine owns the loop and batches
+    many requests' eps evaluations into one model forward; the loop
+    samplers here are thin drivers over the same machine, so both paths
+    produce bit-identical outputs.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 import jax
@@ -31,91 +47,191 @@ def ddim_step(sched: NoiseSchedule, x_t, t: int, t_prev: int, eps,
     return x_prev
 
 
+# ---------------------------------------------------------------------------
+# Step-wise API: an eps-request state machine per generation.
+# ---------------------------------------------------------------------------
+
+# DPM-Solver-2 phases: eps needed at (x, seq[i]) / at the midpoint (u, t_mid)
+# / the final DDIM step to x0 at (x, seq[-1]).
+_DPM_T, _DPM_MID, _DPM_FINAL = 0, 1, 2
+
+
+@dataclasses.dataclass
+class SamplerState:
+    """One request's denoising trajectory, advanced one eps at a time."""
+
+    kind: str                      # 'ddim' | 'plms' | 'dpm_solver2'
+    sched: NoiseSchedule
+    seq: np.ndarray                # descending timestep subsequence
+    x: jnp.ndarray                 # current latent (B, H, W, C)
+    key: jax.Array
+    eta: float = 0.0
+    i: int = 0                     # next seq index
+    done: bool = False
+    old_eps: list = dataclasses.field(default_factory=list)   # PLMS history
+    # DPM-Solver-2 scratch: hoisted log-SNR table + mid-step carry.
+    lams: jnp.ndarray | None = None
+    phase: int = _DPM_T
+    t_mid: int = -1
+    u: jnp.ndarray | None = None
+    h: jnp.ndarray | None = None
+
+    @property
+    def eval_x(self) -> jnp.ndarray:
+        """The state the next eps evaluation runs on."""
+        if self.kind == "dpm_solver2" and self.phase == _DPM_MID:
+            return self.u
+        return self.x
+
+    @property
+    def steps_left(self) -> int:
+        return 0 if self.done else len(self.seq) - self.i
+
+
+def sampler_init(kind: str, sched: NoiseSchedule, shape, key, *,
+                 steps: int = 50, eta: float = 0.0) -> SamplerState:
+    """Draw x_T and build the request machine (kind in SAMPLERS)."""
+    assert kind in STEP_SAMPLERS, kind
+    seq = sample_timesteps(sched.T, steps)
+    key, k0 = jax.random.split(key)
+    x = jax.random.normal(k0, shape)
+    st = SamplerState(kind, sched, seq, x, key, eta=eta)
+    if kind == "dpm_solver2":
+        # Hoisted out of the per-step loop: the full-schedule log-SNR/2
+        # table used to invert lambda -> nearest discrete timestep.
+        st.lams = 0.5 * jnp.log(sched.alpha_bars / (1 - sched.alpha_bars))
+        if len(seq) == 1:
+            st.phase = _DPM_FINAL
+    return st
+
+
+def sampler_needed_t(st: SamplerState) -> int:
+    """Timestep the next eps evaluation must run at (engine batching key)."""
+    assert not st.done
+    if st.kind == "dpm_solver2":
+        if st.phase == _DPM_MID:
+            return st.t_mid
+        if st.phase == _DPM_FINAL:
+            return int(st.seq[-1])
+    return int(st.seq[st.i])
+
+
+def _coeffs(sched: NoiseSchedule, t: int):
+    ab = sched.alpha_bars[t]
+    return jnp.sqrt(ab), jnp.sqrt(1 - ab)  # alpha_t, sigma_t
+
+
+def _advance_ddim(st: SamplerState, eps) -> None:
+    t = int(st.seq[st.i])
+    t_prev = int(st.seq[st.i + 1]) if st.i + 1 < len(st.seq) else -1
+    st.key, kn = jax.random.split(st.key)
+    noise = jax.random.normal(kn, st.x.shape) if st.eta > 0 else None
+    st.x = ddim_step(st.sched, st.x, t, t_prev, eps, st.eta, noise)
+    st.i += 1
+    st.done = st.i >= len(st.seq)
+
+
+def _advance_plms(st: SamplerState, eps) -> None:
+    t = int(st.seq[st.i])
+    t_prev = int(st.seq[st.i + 1]) if st.i + 1 < len(st.seq) else -1
+    old = st.old_eps
+    if len(old) == 0:
+        eps_prime = eps
+    elif len(old) == 1:
+        eps_prime = (3 * eps - old[-1]) / 2
+    elif len(old) == 2:
+        eps_prime = (23 * eps - 16 * old[-1] + 5 * old[-2]) / 12
+    else:
+        eps_prime = (55 * eps - 59 * old[-1] + 37 * old[-2] - 9 * old[-3]) / 24
+    st.old_eps = (old + [eps])[-3:]
+    st.x = ddim_step(st.sched, st.x, t, t_prev, eps_prime)
+    st.i += 1
+    st.done = st.i >= len(st.seq)
+
+
+def _advance_dpm(st: SamplerState, eps) -> None:
+    if st.phase == _DPM_FINAL:
+        st.x = ddim_step(st.sched, st.x, int(st.seq[-1]), -1, eps)
+        st.done = True
+        return
+    t, t_next = int(st.seq[st.i]), int(st.seq[st.i + 1])
+    if st.phase == _DPM_T:
+        l_t, l_n = st.lams[t], st.lams[t_next]
+        h = l_n - l_t
+        l_mid = l_t + 0.5 * h
+        st.t_mid = int(jnp.argmin(jnp.abs(st.lams - l_mid)))
+        a_t, _ = _coeffs(st.sched, t)
+        a_m, s_m = _coeffs(st.sched, st.t_mid)
+        st.u = (a_m / a_t) * st.x - s_m * jnp.expm1(0.5 * h) * eps
+        st.h = h
+        st.phase = _DPM_MID
+        return
+    # _DPM_MID: consume the midpoint eps, complete the solver step.
+    a_t, _ = _coeffs(st.sched, t)
+    a_n, s_n = _coeffs(st.sched, t_next)
+    st.x = (a_n / a_t) * st.x - s_n * jnp.expm1(st.h) * eps
+    st.u = None
+    st.i += 1
+    st.phase = _DPM_T if st.i < len(st.seq) - 1 else _DPM_FINAL
+
+
+_ADVANCE = {"ddim": _advance_ddim, "plms": _advance_plms,
+            "dpm_solver2": _advance_dpm}
+
+
+def sampler_advance(st: SamplerState, eps) -> SamplerState:
+    """Consume the eps evaluated at (st.eval_x, sampler_needed_t(st))."""
+    assert not st.done, "sampler already finished"
+    _ADVANCE[st.kind](st, eps)
+    return st
+
+
+STEP_SAMPLERS = ("ddim", "plms", "dpm_solver2")
+
+
+# ---------------------------------------------------------------------------
+# Loop samplers — thin drivers over the step machine (same bits).
+# ---------------------------------------------------------------------------
+
+
+def _eps_batch(eps_fn: EpsFn, st: SamplerState, t: int) -> jnp.ndarray:
+    tb = jnp.full((st.x.shape[0],), t, jnp.float32)
+    return eps_fn(st.eval_x, tb)
+
+
 def ddim_sample(eps_fn: EpsFn, sched: NoiseSchedule, shape, key, *,
                 steps: int = 50, eta: float = 0.0,
                 collect_every: int = 0):
     """Full DDIM sampling loop. Returns (x0, taps) where taps is a list of
 
     (t, x_t) pairs when collect_every > 0 (Q-Diffusion calibration sets)."""
-    seq = sample_timesteps(sched.T, steps)
-    key, k0 = jax.random.split(key)
-    x = jax.random.normal(k0, shape)
+    st = sampler_init("ddim", sched, shape, key, steps=steps, eta=eta)
     taps = []
-    for i, t in enumerate(seq):
-        t_prev = int(seq[i + 1]) if i + 1 < len(seq) else -1
-        tb = jnp.full((shape[0],), t, jnp.float32)
-        eps = eps_fn(x, tb)
-        if collect_every and (i % collect_every == 0):
-            taps.append((int(t), np.asarray(x)))
-        key, kn = jax.random.split(key)
-        noise = jax.random.normal(kn, shape) if eta > 0 else None
-        x = ddim_step(sched, x, int(t), t_prev, eps, eta, noise)
-    return x, taps
+    while not st.done:
+        t = sampler_needed_t(st)
+        eps = _eps_batch(eps_fn, st, t)
+        if collect_every and (st.i % collect_every == 0):
+            taps.append((t, np.asarray(st.x)))
+        sampler_advance(st, eps)
+    return st.x, taps
 
 
 def plms_sample(eps_fn: EpsFn, sched: NoiseSchedule, shape, key, *,
                 steps: int = 50):
     """Pseudo Linear Multi-Step (PLMS/PNDM) sampler, 4th-order AB corrector."""
-    seq = sample_timesteps(sched.T, steps)
-    key, k0 = jax.random.split(key)
-    x = jax.random.normal(k0, shape)
-    old_eps: list = []
-    for i, t in enumerate(seq):
-        t_prev = int(seq[i + 1]) if i + 1 < len(seq) else -1
-        tb = jnp.full((shape[0],), t, jnp.float32)
-        eps = eps_fn(x, tb)
-        if len(old_eps) == 0:
-            eps_prime = eps
-        elif len(old_eps) == 1:
-            eps_prime = (3 * eps - old_eps[-1]) / 2
-        elif len(old_eps) == 2:
-            eps_prime = (23 * eps - 16 * old_eps[-1] + 5 * old_eps[-2]) / 12
-        else:
-            eps_prime = (55 * eps - 59 * old_eps[-1] + 37 * old_eps[-2]
-                         - 9 * old_eps[-3]) / 24
-        old_eps = (old_eps + [eps])[-3:]
-        x = ddim_step(sched, x, int(t), t_prev, eps_prime)
-    return x
+    st = sampler_init("plms", sched, shape, key, steps=steps)
+    while not st.done:
+        sampler_advance(st, _eps_batch(eps_fn, st, sampler_needed_t(st)))
+    return st.x
 
 
 def dpm_solver2_sample(eps_fn: EpsFn, sched: NoiseSchedule, shape, key, *,
                        steps: int = 20):
     """DPM-Solver-2 (midpoint) in log-SNR time (Lu et al. 2022)."""
-    seq = sample_timesteps(sched.T, steps)
-    key, k0 = jax.random.split(key)
-    x = jax.random.normal(k0, shape)
-
-    def lam(t):  # log-SNR/2
-        ab = sched.alpha_bars[t]
-        return 0.5 * jnp.log(ab / (1 - ab))
-
-    def coeffs(t):
-        ab = sched.alpha_bars[t]
-        return jnp.sqrt(ab), jnp.sqrt(1 - ab)  # alpha_t, sigma_t
-
-    for i in range(len(seq) - 1):
-        t, t_next = int(seq[i]), int(seq[i + 1])
-        l_t, l_n = lam(t), lam(t_next)
-        h = l_n - l_t
-        # midpoint timestep in lambda space
-        l_mid = l_t + 0.5 * h
-        # invert lambda -> nearest discrete timestep
-        lams = 0.5 * jnp.log(sched.alpha_bars / (1 - sched.alpha_bars))
-        t_mid = int(jnp.argmin(jnp.abs(lams - l_mid)))
-        a_t, s_t = coeffs(t)
-        a_m, s_m = coeffs(t_mid)
-        a_n, s_n = coeffs(t_next)
-        tb = jnp.full((shape[0],), t, jnp.float32)
-        eps1 = eps_fn(x, tb)
-        u = (a_m / a_t) * x - s_m * jnp.expm1(0.5 * h) * eps1
-        tbm = jnp.full((shape[0],), t_mid, jnp.float32)
-        eps2 = eps_fn(u, tbm)
-        x = (a_n / a_t) * x - s_n * jnp.expm1(h) * eps2
-    # final step to x0 with DDIM
-    t_last = int(seq[-1])
-    tb = jnp.full((shape[0],), t_last, jnp.float32)
-    x = ddim_step(sched, x, t_last, -1, eps_fn(x, tb))
-    return x
+    st = sampler_init("dpm_solver2", sched, shape, key, steps=steps)
+    while not st.done:
+        sampler_advance(st, _eps_batch(eps_fn, st, sampler_needed_t(st)))
+    return st.x
 
 
 SAMPLERS = {"ddim": ddim_sample, "plms": plms_sample,

@@ -77,7 +77,6 @@ def main(argv=None) -> None:
 
         # prefill by stepping the prompt (teacher-forced decode fills caches)
         t0 = time.time()
-        tok = prompts[:, :1]
         logits = None
         for i in range(args.prompt_len):
             logits, caches = dec(params, caches, prompts[:, i:i + 1],

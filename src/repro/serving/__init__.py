@@ -1,0 +1,14 @@
+"""Diffusion serving: TALoRA-merged weight bank + continuous-batched engine.
+
+The deployment story of App. E made concrete: the TALoRA router is a
+deterministic function of the timestep, so the denoising trajectory splits
+into contiguous *segments* with identical routing. ``WeightBank``
+pre-merges and pre-packs one real packed-FP4 weight set per segment;
+``DiffusionServingEngine`` continuously batches many users' generation
+requests through one quantized UNet forward per tick.
+"""
+from repro.serving.weight_bank import (WeightBank, Segment, segments_of,
+                                       absmax_talora_setup, act_qps_from_plan,
+                                       default_serving_plan)
+from repro.serving.scheduler import GenRequest, RequestState, ContinuousBatcher
+from repro.serving.engine import DiffusionServingEngine

@@ -1,0 +1,208 @@
+"""Diffusion serving engine: continuous-batched denoising on packed W4A4.
+
+One engine *tick*:
+
+  1. admit arrived requests into free in-flight slots (FIFO),
+  2. group in-flight requests by the weight-bank segment of the timestep
+     each sampler needs next, pick one group (scheduler policy),
+  3. fetch that segment's pre-merged, pre-packed weights from the bank
+     (LRU — the common case is a hit, since consecutive sampler steps
+     stay inside a routing segment),
+  4. run ONE batched model forward per class-conditioning partition
+     (per-sample ``t``; CFG-guided requests contribute a cond + uncond
+     pair and are recombined as ``eps_u + s * (eps_c - eps_u)``),
+  5. advance each request's sampler state; retire finished requests.
+
+The forward runs under a *serve-mode* ``QuantContext`` — activation
+quantization happens inside the fused W4A4 kernel for packed dense sites
+and there is no fake-quant anywhere on this path; weights are real packed
+uint8 nibbles end-to-end (``kernels/ops`` dispatch).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion.samplers import (sampler_advance, sampler_init,
+                                      sampler_needed_t)
+from repro.diffusion.schedule import NoiseSchedule
+from repro.nn.unet import UNetConfig, unet_apply
+from repro.quant.calibrate import QuantContext
+from repro.serving.scheduler import (ContinuousBatcher, GenRequest,
+                                     RequestState)
+from repro.serving.weight_bank import WeightBank
+
+# role of one eval item in its request: plain, or half of a CFG pair
+_PLAIN, _UNCOND, _COND = 0, 1, 2
+
+
+class DiffusionServingEngine:
+    """Owns the denoising loop for many concurrent generation requests."""
+
+    def __init__(self, cfg: UNetConfig, sched: NoiseSchedule,
+                 bank: WeightBank, *,
+                 act_qps: dict | None = None,
+                 apply_fn: Callable | None = None,
+                 max_batch: int = 8, starvation_ticks: int = 4,
+                 now_fn: Callable[[], float] | None = None):
+        self.cfg = cfg
+        self.sched = sched
+        self.bank = bank
+        self.ctx = QuantContext("serve", act_qps=act_qps or {})
+        self._apply = apply_fn or (
+            lambda params, x, tb, y, ctx: unet_apply(params, x, tb, cfg,
+                                                     y=y, ctx=ctx))
+        self.batcher = ContinuousBatcher(max_batch, starvation_ticks)
+        t0 = time.monotonic()
+        self._now = now_fn or (lambda: time.monotonic() - t0)
+        self._jit: dict[tuple, Callable] = {}
+        self._next_rid = 0
+        self.tick_count = 0
+        self.n_forwards = 0
+        self.n_samples_batched = 0
+        self.n_finished = 0
+        self._latencies: list[float] = []    # scalars only; never evicted
+        self.results: dict[int, RequestState] = {}
+
+    # -- request lifecycle -------------------------------------------------
+
+    def submit(self, *, steps: int = 20, eta: float = 0.0, seed: int = 0,
+               sampler: str = "ddim", y: int | None = None,
+               guidance_scale: float = 0.0, arrival: float = 0.0) -> int:
+        if guidance_scale > 0 and (y is None or not self.cfg.num_classes):
+            raise ValueError("guidance needs a class label y and a "
+                             "class-conditional model")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = GenRequest(rid, steps, eta, seed, sampler, y, guidance_scale,
+                         arrival)
+        shape = (1, self.cfg.image_size, self.cfg.image_size, self.cfg.in_ch)
+        state = sampler_init(sampler, self.sched, shape,
+                             jax.random.PRNGKey(seed), steps=steps, eta=eta)
+        self.batcher.submit(RequestState(req, state,
+                                         submitted_at=self._now()))
+        return rid
+
+    # -- one engine tick ---------------------------------------------------
+
+    def tick(self) -> list[RequestState]:
+        now = self._now()
+        self.batcher.admit(now, self.tick_count)
+        if not self.batcher.inflight:
+            return []
+        groups = self.batcher.groups(
+            lambda rs: self.bank.segment_of(sampler_needed_t(rs.state)))
+        seg, members = self.batcher.select(groups, self.tick_count)
+        params = self.bank.params_for_segment(seg)
+
+        # build eval items: (rs, role, t, x (1,H,W,C), y)
+        items = []
+        for rs in members:
+            t = sampler_needed_t(rs.state)
+            x = rs.state.eval_x
+            if rs.req.guidance_scale > 0:
+                items.append((rs, _UNCOND, t, x, None))
+                items.append((rs, _COND, t, x, rs.req.y))
+            else:
+                items.append((rs, _PLAIN, t, x, rs.req.y))
+
+        eps_by_item = self._run_partitions(params, items)
+
+        finished = []
+        tick = self.tick_count
+        for rs in members:
+            parts = eps_by_item[id(rs)]
+            if _PLAIN in parts:
+                eps = parts[_PLAIN]
+            else:
+                s = rs.req.guidance_scale
+                eps = parts[_UNCOND] + s * (parts[_COND] - parts[_UNCOND])
+            sampler_advance(rs.state, eps)
+            rs.last_advance_tick = tick
+            rs.n_evals += 1
+            if rs.state.done:
+                rs.x0 = rs.state.x
+                rs.finished_at = self._now()
+                self.batcher.retire(rs)
+                self.results[rs.req.rid] = rs
+                self.n_finished += 1
+                self._latencies.append(rs.latency)
+                finished.append(rs)
+        self.tick_count += 1
+        return finished
+
+    def _run_partitions(self, params, items) -> dict[int, dict]:
+        """One batched forward per class-conditioning partition.
+
+        ``unet_apply`` takes a single optional ``y`` array, so items with
+        and without a label cannot share a forward; each partition still
+        batches arbitrary timesteps (``t`` is per-sample).
+        """
+        eps_by_item: dict[int, dict] = {}
+        for has_y in (False, True):
+            part = [it for it in items if (it[4] is not None) == has_y]
+            if not part:
+                continue
+            x = jnp.concatenate([it[3] for it in part], axis=0)
+            tb = jnp.asarray([it[2] for it in part], jnp.float32)
+            y = (jnp.asarray([it[4] for it in part], jnp.int32)
+                 if has_y else None)
+            eps = self._forward(params, x, tb, y)
+            self.n_forwards += 1
+            self.n_samples_batched += len(part)
+            for j, (rs, role, *_rest) in enumerate(part):
+                eps_by_item.setdefault(id(rs), {})[role] = eps[j:j + 1]
+        return eps_by_item
+
+    def _forward(self, params, x, tb, y):
+        key = (x.shape[0], y is not None)
+        if key not in self._jit:
+            if y is None:
+                self._jit[key] = jax.jit(
+                    lambda p, x, tb: self._apply(p, x, tb, None, self.ctx))
+            else:
+                self._jit[key] = jax.jit(
+                    lambda p, x, tb, y: self._apply(p, x, tb, y, self.ctx))
+        fn = self._jit[key]
+        return fn(params, x, tb) if y is None else fn(params, x, tb, y)
+
+    def pop_result(self, rid: int) -> RequestState:
+        """Hand a finished request to its caller and release the engine's
+        reference (a long-lived engine must not retain every generated
+        latent; latency scalars stay for ``stats``)."""
+        return self.results.pop(rid)
+
+    # -- driver ------------------------------------------------------------
+
+    def run(self, *, poll_sleep: float = 0.002) -> dict[int, RequestState]:
+        """Tick until every submitted request has finished."""
+        while self.batcher.pending or self.batcher.inflight:
+            self.tick()
+            if not self.batcher.inflight and self.batcher.pending:
+                nxt = self.batcher.next_arrival()
+                wait = nxt - self._now()
+                if wait > 0:
+                    time.sleep(min(wait, max(poll_sleep, 0.0)))
+        return self.results
+
+    # -- metrics -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        lat = sorted(self._latencies)
+
+        def pct(p):
+            if not lat:
+                return 0.0
+            k = min(len(lat) - 1, int(round(p / 100 * (len(lat) - 1))))
+            return lat[k]
+
+        d = {"requests": self.n_finished, "ticks": self.tick_count,
+             "forwards": self.n_forwards,
+             "mean_batch": (self.n_samples_batched / self.n_forwards
+                            if self.n_forwards else 0.0),
+             "p50_s": pct(50), "p95_s": pct(95), "p99_s": pct(99)}
+        d.update({f"bank_{k}": v for k, v in self.bank.describe().items()})
+        return d

@@ -1,0 +1,122 @@
+"""Continuous-batching scheduler for diffusion generation requests.
+
+Policy (documented for the README/tests):
+
+  * **Admission** — FIFO by (arrival, rid). A request is admissible once
+    its arrival time has passed and an in-flight slot (``max_batch``) is
+    free; requests admit/retire *mid-flight*, the batch never drains.
+  * **Grouping** — in-flight requests are grouped by the weight-bank
+    segment of the timestep their sampler needs next. Requests inside a
+    segment batch into one model forward even at different timesteps
+    (``t`` is per-sample in the UNet).
+  * **Selection** — each tick advances one segment group: the largest
+    (ties: the group containing the earliest-admitted request), except
+    that a request that has not advanced for ``starvation_ticks`` ticks
+    promotes its own group (no segment starves under skewed traffic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.diffusion.samplers import SamplerState
+
+
+@dataclasses.dataclass(frozen=True)
+class GenRequest:
+    """One user's generation job (per-request steps/eta/seed/guidance)."""
+
+    rid: int
+    steps: int = 20
+    eta: float = 0.0
+    seed: int = 0
+    sampler: str = "ddim"
+    y: int | None = None            # class label (class-conditional models)
+    guidance_scale: float = 0.0     # > 0 pairs a cond + uncond eval (CFG)
+    arrival: float = 0.0            # seconds from trace start
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Scheduler-side lifecycle wrapper around a SamplerState."""
+
+    req: GenRequest
+    state: SamplerState
+    submitted_at: float = 0.0
+    admitted_at: float | None = None
+    finished_at: float | None = None
+    last_advance_tick: int = -1
+    n_evals: int = 0
+    x0: jnp.ndarray | None = None
+
+    @property
+    def latency(self) -> float | None:
+        """Service latency from *arrival* (a trace request submitted ahead
+        of its arrival time hasn't waited while merely scheduled)."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - max(self.submitted_at, self.req.arrival)
+
+    @property
+    def queue_wait(self) -> float | None:
+        if self.admitted_at is None:
+            return None
+        return self.admitted_at - max(self.submitted_at, self.req.arrival)
+
+
+class ContinuousBatcher:
+    def __init__(self, max_batch: int = 8, starvation_ticks: int = 4):
+        assert max_batch >= 1
+        self.max_batch = max_batch
+        self.starvation_ticks = max(1, starvation_ticks)
+        self.pending: list[RequestState] = []
+        self.inflight: list[RequestState] = []
+
+    def submit(self, rs: RequestState) -> None:
+        self.pending.append(rs)
+        self.pending.sort(key=lambda r: (r.req.arrival, r.req.rid))
+
+    def next_arrival(self) -> float | None:
+        return self.pending[0].req.arrival if self.pending else None
+
+    def admit(self, now: float, tick: int) -> list[RequestState]:
+        admitted = []
+        while (self.pending and len(self.inflight) < self.max_batch
+               and self.pending[0].req.arrival <= now):
+            rs = self.pending.pop(0)
+            rs.admitted_at = now
+            rs.last_advance_tick = tick  # freshly admitted, not starved
+            self.inflight.append(rs)
+            admitted.append(rs)
+        return admitted
+
+    def groups(self, seg_fn: Callable[[RequestState], int]
+               ) -> dict[int, list[RequestState]]:
+        out: dict[int, list[RequestState]] = {}
+        for rs in self.inflight:
+            out.setdefault(seg_fn(rs), []).append(rs)
+        return out
+
+    def select(self, groups: dict[int, list[RequestState]], tick: int
+               ) -> tuple[int, list[RequestState]]:
+        assert groups
+        starved = [rs for rs in self.inflight
+                   if tick - rs.last_advance_tick >= self.starvation_ticks]
+        if starved:
+            oldest = min(starved, key=lambda r: (r.last_advance_tick,
+                                                 r.req.rid))
+            for seg, members in groups.items():
+                if oldest in members:
+                    return seg, members
+        # largest group; ties -> the group holding the smallest rid
+        def rank(item):
+            seg, members = item
+            return (-len(members), min(r.req.rid for r in members))
+
+        seg, members = min(groups.items(), key=rank)
+        return seg, members
+
+    def retire(self, rs: RequestState) -> None:
+        self.inflight.remove(rs)

@@ -1,0 +1,259 @@
+"""Weight bank: per-routing-segment TALoRA merge + real FP4 pre-packing.
+
+The TALoRA router maps each timestep to one adapter slot per layer
+(``core.talora``). Sweeping the router over the full schedule yields a
+small number of contiguous timestep segments with identical routing; within
+a segment the merged weights ``W_q + A_sel B_sel * alpha/r`` are constant.
+The bank therefore:
+
+  1. sweeps ``routing_signatures`` once to find the segments,
+  2. on demand merges each segment's adapters into the quantized base
+     (``talora.merge_into_tree``) and *re-packs* every quantizable site to
+     real packed FP4 (``core.qmodule.pack_weight``) under the plan's
+     searched parameters — sampling then runs integer-packed weights
+     end-to-end (kernels/ops dispatch) instead of fake-quant,
+  3. keeps at most ``max_cached`` segment weight-sets alive (LRU; a
+     trained router uses few segments — App. E.2's h=2 gives 2-4 — but an
+     untrained or large-h router can fragment the schedule).
+
+Sites the 4-bit packer cannot represent — 8-bit io sites, INT-affine
+plans, odd output widths, 1-D leaves — fall back to dense ``bf16`` so the
+forward stays total.
+
+Re-packing note: fine-tuning computes the merged weight in float; packing
+snaps it back onto the searched FP4 grid (values pushed past ``maxval`` by
+the adapter clip). This is the standard merged-LoRA deployment trade and
+is what the engine's parity test measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.tree import flatten_paths, unflatten_paths
+from repro.core import talora
+from repro.core.msfp import QuantPlan, SiteInfo
+from repro.core.qmodule import PackedW4, pack_weight
+from repro.quant.fakequant import (KIND_FP_SIGNED, KIND_INT_AFFINE,
+                                   QuantizerParams)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """Maximal run of timesteps [t_lo, t_hi] with identical routing."""
+
+    index: int
+    t_lo: int
+    t_hi: int                 # inclusive
+    slots: tuple              # per-layer selected hub slot (len = n_layers)
+
+    def __contains__(self, t: int) -> bool:
+        return self.t_lo <= t <= self.t_hi
+
+
+def segments_of(signatures: np.ndarray) -> list[Segment]:
+    """Contiguous equal-row runs of a (T, n_layers) signature sweep."""
+    sig = np.asarray(signatures)
+    assert sig.ndim == 2, sig.shape
+    segs: list[Segment] = []
+    lo = 0
+    for t in range(1, sig.shape[0] + 1):
+        if t == sig.shape[0] or not np.array_equal(sig[t], sig[lo]):
+            segs.append(Segment(len(segs), lo, t - 1, tuple(sig[lo].tolist())))
+            lo = t
+    return segs
+
+
+def _packable(site: str, w, plan: QuantPlan) -> bool:
+    if site not in plan.sites or not plan.sites[site].is_weight:
+        return False
+    qp = plan.sites[site].qp
+    if qp.bits != 4 or qp.kind == KIND_INT_AFFINE:
+        return False
+    if getattr(w, "ndim", 0) < 2 or w.shape[-1] % 2 != 0:
+        return False
+    mv = jnp.asarray(qp.maxval)
+    if mv.ndim == 1 and not (w.ndim == 2 and mv.shape[0] == w.shape[-1]):
+        return False
+    return mv.ndim <= 1
+
+
+def pack_param_tree(params: dict, plan: QuantPlan, *,
+                    fallback_dtype=jnp.bfloat16) -> tuple[dict, dict]:
+    """Pack every plan-covered 4-bit FP weight; bf16 the rest of the planned
+    weights; leave unplanned leaves (biases, norms) untouched.
+
+    Returns (tree, stats) with stats = {'packed': [...], 'fallback': [...]}.
+    """
+    flat = dict(flatten_paths(params))
+    packed_sites, fallback_sites = [], []
+    for site, w in flat.items():
+        if isinstance(w, PackedW4):
+            packed_sites.append(site)
+            continue
+        if _packable(site, w, plan):
+            flat[site] = pack_weight(w, plan.sites[site].qp)
+            packed_sites.append(site)
+        elif site in plan.sites and plan.sites[site].is_weight:
+            flat[site] = w.astype(fallback_dtype)
+            fallback_sites.append(site)
+    return unflatten_paths(flat), {"packed": packed_sites,
+                                   "fallback": fallback_sites}
+
+
+def default_serving_plan(weights: dict[str, Any], *,
+                         io_sites: frozenset | set = frozenset()
+                         ) -> QuantPlan:
+    """Calibration-free deployment plan: signed E2M1 with abs-max grids.
+
+    The searched plan (``msfp.build_mixed_plan``) is the paper-faithful
+    path; this is the cheap bring-up default for the serving CLI / tests —
+    every weight site gets a per-tensor abs-max signed FP4 quantizer, io
+    sites get 8-bit (E4M3) which the packer treats as bf16 fallback.
+    """
+    sites: dict[str, SiteInfo] = {}
+    for name, w in weights.items():
+        mv = jnp.maximum(jnp.max(jnp.abs(w)).astype(jnp.float32), 1e-8)
+        if name in io_sites:
+            qp = QuantizerParams(KIND_FP_SIGNED, 4, 3, 8, mv)
+        else:
+            qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, mv)
+        sites[name] = SiteInfo(qp, True, False, 0.0)
+    return QuantPlan(sites, 4, 4, "msfp")
+
+
+def absmax_talora_setup(params: dict, talora_cfg: talora.TALoRAConfig, key,
+                        *, io_sites: frozenset | set = frozenset()
+                        ) -> tuple[QuantPlan, dict, dict]:
+    """Calibration-free bank inputs for a raw param tree.
+
+    Shared by the serving launcher and bench: filters the packable weight
+    sites, builds the abs-max plan, and initializes TALoRA hubs + router
+    (untrained — routing is still a deterministic segmenting function).
+    Returns (plan, hubs, router).
+    """
+    weights = {k: v for k, v in flatten_paths(params).items()
+               if k.endswith("/w") and getattr(v, "ndim", 0) >= 2}
+    plan = default_serving_plan(weights, io_sites=io_sites)
+    dims = talora.lora_target_dims_from_weights(weights)
+    k1, k2 = jax.random.split(key)
+    hubs = talora.init_lora_hub(k1, dims, talora_cfg)
+    router = talora.init_router(k2, len(dims), talora_cfg)
+    return plan, hubs, router
+
+
+def act_qps_from_plan(plan: QuantPlan | None) -> dict[str, QuantizerParams]:
+    """Per-site activation quantizers the fused W4A4 kernel can consume.
+
+    Serve-mode ``QuantContext`` feeds these to packed dense sites; only
+    per-tensor FP quantizers qualify (INT-affine falls back to the plain
+    packed matmul, which is still integer-packed — just not act-fused).
+    """
+    if plan is None:
+        return {}
+    out = {}
+    for name, info in plan.sites.items():
+        if info.is_weight or info.qp.kind == KIND_INT_AFFINE:
+            continue
+        if info.qp.bits != 4 or jnp.ndim(info.qp.maxval) != 0:
+            continue
+        out[name] = info.qp
+    return out
+
+
+class WeightBank:
+    """LRU cache of per-segment TALoRA-merged, FP4-packed weight sets."""
+
+    def __init__(self, q_params: dict, plan: QuantPlan, hubs: dict,
+                 router: dict, talora_cfg: talora.TALoRAConfig, T: int, *,
+                 max_cached: int = 4, fallback_dtype=jnp.bfloat16):
+        self.q_params = q_params
+        self.plan = plan
+        self.hubs = hubs
+        self.router = router
+        self.talora_cfg = talora_cfg
+        self.T = T
+        self.max_cached = max(1, max_cached)
+        self.fallback_dtype = fallback_dtype
+        self.names = sorted(hubs) if hubs else []
+
+        if hubs and router is not None:
+            sig = np.asarray(talora.routing_signatures(
+                router, jnp.arange(T), self.names, talora_cfg))
+        else:
+            sig = np.zeros((T, 1), np.int32)   # no TALoRA: one segment
+        self.signatures = sig
+        self.segments = segments_of(sig)
+        self._t_to_seg = np.zeros((T,), np.int32)
+        for s in self.segments:
+            self._t_to_seg[s.t_lo:s.t_hi + 1] = s.index
+
+        self._cache: OrderedDict[int, dict] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.pack_stats: dict | None = None
+
+    # -- segment lookup ----------------------------------------------------
+
+    def segment_of(self, t: int) -> int:
+        t = int(t)
+        if not 0 <= t < self.T:
+            raise ValueError(f"timestep {t} outside schedule [0, {self.T})")
+        return int(self._t_to_seg[t])
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    # -- weight materialization --------------------------------------------
+
+    def params_for_t(self, t: int) -> dict:
+        return self.params_for_segment(self.segment_of(t))
+
+    def params_for_segment(self, seg: int) -> dict:
+        if seg in self._cache:
+            self.hits += 1
+            self._cache.move_to_end(seg)
+            return self._cache[seg]
+        self.misses += 1
+        params = self._build(self.segments[seg])
+        self._cache[seg] = params
+        while len(self._cache) > self.max_cached:
+            self._cache.popitem(last=False)
+            self.evictions += 1
+        return params
+
+    def _build(self, seg: Segment) -> dict:
+        params = self.q_params
+        if self.hubs and self.router is not None:
+            sels = {name: jax.nn.one_hot(seg.slots[i],
+                                         self.talora_cfg.hub_size)
+                    for i, name in enumerate(self.names)}
+            params = talora.merge_into_tree(params, self.hubs, sels,
+                                            self.talora_cfg)
+        packed, stats = pack_param_tree(params, self.plan,
+                                        fallback_dtype=self.fallback_dtype)
+        if self.pack_stats is None:
+            self.pack_stats = stats
+        return packed
+
+    def describe(self) -> dict:
+        d = {"segments": self.n_segments, "cached": len(self._cache),
+             "max_cached": self.max_cached, "hits": self.hits,
+             "misses": self.misses, "evictions": self.evictions,
+             "hit_rate": self.hit_rate}
+        if self.pack_stats is not None:
+            d["packed_sites"] = len(self.pack_stats["packed"])
+            d["fallback_sites"] = len(self.pack_stats["fallback"])
+        return d
