@@ -10,7 +10,7 @@ import numpy as np
 
 import repro.kernels.ops as ops
 from benchmarks.common import timer
-from repro.core.qmodule import pack_weight
+from repro.core.qmodule import dequant_weight, pack_weight
 from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
 
 
@@ -78,6 +78,44 @@ def rows(log=print) -> list[dict]:
     out.append({"name": "w4a4_matmul_qdq_then_matmul_ref",
                 "us_per_call": us_2pass,
                 "derived": f"HBM {b_2pass / 1e6:.2f}MB"})
+
+    # im2col W4A4 conv route vs decode-then-XLA-conv (today's fallback).
+    # Mid-block diffusion shape: small spatial, wide channels — the weight
+    # bytes dominate, which is exactly where the packed route wins (the
+    # patch matrix round-trip is the route's known cost; see kernels/README).
+    bq, hq, cinq, coutq, kk = 1, 8, 256, 256, 3
+    xc = jax.random.normal(key, (bq, hq, hq, cinq), jnp.bfloat16)
+    wc = jax.random.normal(key, (kk, kk, cinq, coutq), jnp.float32) * 0.05
+    qp_c = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
+                           jnp.maximum(jnp.max(jnp.abs(wc)), 1e-6))
+    pw_c = pack_weight(wc, qp_c)
+    act_qp_c = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(4.0))
+    f_conv = jax.jit(lambda x: ops.w4a4_conv2d(x, pw_c, act_qp_c))
+    us_conv = timer(f_conv, xc)
+
+    def _decode_then_conv(x):
+        w = dequant_weight(pw_c, jnp.bfloat16)
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    f_dec = jax.jit(_decode_then_conv)
+    us_dec = timer(f_dec, xc)
+    mq = bq * hq * hq                      # stride-1 SAME: OH*OW = H*W
+    kq = kk * kk * cinq
+    x_b = xc.size * 2
+    p_b = kq * coutq // 2                  # packed nibbles
+    o_b = mq * coutq * 2
+    b_conv = x_b + 2 * mq * kq * 2 + p_b + o_b     # + patch write/read
+    b_dec = x_b + p_b + 2 * (kq * coutq * 2) + o_b  # + bf16 W write/read
+    out.append({"name": f"w4a4_conv2d_im2col_{hq}x{hq}x{cinq}x{coutq}k{kk}",
+                "us_per_call": us_conv,
+                "derived": f"HBM {b_conv / 1e6:.2f}MB vs "
+                           f"{b_dec / 1e6:.2f}MB decode-then-conv "
+                           f"({b_dec / b_conv:.2f}x)"})
+    out.append({"name": "conv2d_dequant_then_conv_ref",
+                "us_per_call": us_dec,
+                "derived": f"HBM {b_dec / 1e6:.2f}MB (bf16 weight "
+                           f"round-trip each step)"})
 
     t = jax.random.normal(key, (128, 32, 8, 128), jnp.bfloat16)
     f_enc = jax.jit(lambda t: ops.kv4_encode(t))

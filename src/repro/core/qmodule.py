@@ -13,6 +13,7 @@ Code layout (matches ``repro.quant.formats.quant_codes``):
 from __future__ import annotations
 
 import dataclasses
+from math import prod as _prod
 from typing import Any
 
 import jax
@@ -125,24 +126,37 @@ def pack_weight(w: jnp.ndarray, qp: QuantizerParams) -> PackedW4:
     produced per-output-channel maxima, an (out,) vector — the resulting
     PackedW4 carries the vector scale and the Pallas kernel dequantizes
     per channel.
+
+    4D HWIO conv weights (scalar or per-output-channel ``maxval``) pack as
+    their (kh*kw*cin, cout) flattening — the exact GEMM layout the im2col
+    conv route feeds to ``w4_matmul_2d`` — while ``shape`` keeps the
+    original HWIO tuple so fallback paths can reconstruct the kernel.
+    Stacked (scanned / per-expert) weights carry per-slice keepdims
+    ``maxval`` and pack over their last axis as-is.
     """
     fmt = qp.fmt
     assert fmt.bits == 4, f"packing is 4-bit only, got {fmt.bits}"
+    orig_shape = tuple(w.shape)
+    if w.ndim == 4 and jnp.ndim(qp.maxval) <= 1:
+        w = w.reshape(-1, orig_shape[-1])
     scale = jnp.asarray(qp.maxval, jnp.float32)
     if scale.ndim == 1:
         assert w.ndim == 2 and scale.shape[0] == w.shape[-1], \
-            f"per-channel scale {scale.shape} vs weight {w.shape}"
+            f"per-channel scale {scale.shape} vs weight {orig_shape}"
     codes = encode_codes(w, fmt, qp.maxval, qp.zero_point)
     # zero_point mirrors the scale's shape so stacked (per-layer) packs stay
     # scannable (lax.scan needs equal leading dims on every leaf)
     zp = jnp.broadcast_to(jnp.asarray(qp.zero_point, jnp.float32), scale.shape)
     return PackedW4(pack_nibbles(codes), scale, zp,
-                    fmt.exp_bits, fmt.man_bits, fmt.signed, tuple(w.shape))
+                    fmt.exp_bits, fmt.man_bits, fmt.signed, orig_shape)
 
 
 def dequant_weight(pw: PackedW4, dtype=jnp.bfloat16) -> jnp.ndarray:
     codes = unpack_nibbles(pw.packed)
-    return decode_codes(codes, pw.fmt, pw.scale, pw.zero_point, dtype)
+    out = decode_codes(codes, pw.fmt, pw.scale, pw.zero_point, dtype)
+    if out.ndim == 2 and len(pw.shape) == 4 and out.size == _prod(pw.shape):
+        out = out.reshape(pw.shape)  # flattened HWIO conv pack -> back to 4D
+    return out
 
 
 def w4_dense_xla(x: jnp.ndarray, pw: PackedW4, dtype=jnp.bfloat16) -> jnp.ndarray:

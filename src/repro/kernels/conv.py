@@ -1,0 +1,95 @@
+"""Packed-W4 conv2d via im2col feeding the fused W4A4 Pallas matmul.
+
+Conv sites are the UNet's workhorse, and the serving path must give them
+the same treatment dense sites get: packed nibbles decoded in VMEM, with
+the MSFP activation snap fused into the matmul. Rather than a bespoke
+conv kernel, the route lowers NHWC conv (stride + SAME/VALID) to a GEMM:
+
+  1. ``im2col`` unfolds x into a (B*OH*OW, kh*kw*cin) patch matrix whose
+     column order matches the HWIO weight flattened to (kh*kw*cin, cout)
+     — exactly the 2D layout ``core.qmodule.pack_weight`` uses for 4D
+     weights, so the *same* split-half nibble packs and (per-output-
+     channel) scale operands feed ``w4_matmul_2d`` / ``w4a4_matmul_2d``.
+  2. The fused kernel applies the MSFP act-quant snap to each patch tile
+     in VMEM before the dot (``msfp_quant._qdq_block``), so activations
+     are quantized on the way into the MXU with no extra HBM pass.
+
+Zero-padding correctness: SAME padding inserts exact zeros into the patch
+matrix. A *signed* MSFP snap maps 0 -> 0, so fusing the snap over patches
+equals quantize-then-pad (the fake-quant oracle's order). Unsigned
+formats map 0 to the grid floor (the zero-point), so ``ops.w4a4_conv2d``
+pre-quantizes x for those and runs the plain packed matmul — parity is
+preserved for the full format space, fusion for the common signed case.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.qmodule import PackedW4
+from repro.kernels.w4_matmul import w4_matmul_2d, w4a4_matmul_2d
+from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
+
+
+def conv_pads(h: int, w: int, kh: int, kw: int, stride: tuple[int, int],
+              padding) -> tuple[tuple[int, int], tuple[int, int]]:
+    """Resolve a conv padding spec ('SAME'/'VALID' or explicit pairs) to
+    ((ph_lo, ph_hi), (pw_lo, pw_hi)) for the spatial dims."""
+    if isinstance(padding, str):
+        pads = lax.padtype_to_pads((h, w), (kh, kw), stride, padding)
+    else:
+        pads = [tuple(p) for p in padding]
+    (p0, p1), (p2, p3) = pads
+    return (int(p0), int(p1)), (int(p2), int(p3))
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, *, stride: tuple[int, int],
+           padding) -> tuple[jnp.ndarray, tuple[int, int, int]]:
+    """NHWC x -> (B*OH*OW, kh*kw*cin) patch matrix + (B, OH, OW).
+
+    Patch columns are ordered (kh, kw, cin)-major — the flattening of an
+    HWIO kernel's leading axes — so ``patches @ w.reshape(-1, cout)``
+    equals ``conv_general_dilated(x, w)``.
+    """
+    b, h, w, c = x.shape
+    sh, sw = stride
+    (ph0, ph1), (pw0, pw1) = conv_pads(h, w, kh, kw, stride, padding)
+    if ph0 or ph1 or pw0 or pw1:
+        x = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+    oh = (h + ph0 + ph1 - kh) // sh + 1
+    ow = (w + pw0 + pw1 - kw) // sw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i:i + sh * (oh - 1) + 1:sh,
+                          j:j + sw * (ow - 1) + 1:sw, :])
+    patches = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=-1)
+    return patches.reshape(b * oh * ow, kh * kw * c), (b, oh, ow)
+
+
+def w4a4_conv2d_im2col(x: jnp.ndarray, pw: PackedW4,
+                       act_qp: QuantizerParams | None, *,
+                       stride: tuple[int, int], padding,
+                       interpret: bool = False) -> jnp.ndarray:
+    """x: (B, H, W, cin) @ packed HWIO W4 -> (B, OH, OW, cout).
+
+    ``act_qp`` (signed, per-tensor) fuses the MSFP act snap into the
+    matmul kernel; None runs the plain packed matmul (caller pre-quantized
+    or no act quant planned).
+    """
+    kh, kw, cin, cout = pw.shape
+    assert x.shape[-1] == cin, (x.shape, pw.shape)
+    patches, (b, oh, ow) = im2col(x, kh, kw, stride=stride, padding=padding)
+    if act_qp is None:
+        out = w4_matmul_2d(patches, pw.packed, pw.scale, pw.zero_point,
+                           exp_bits=pw.exp_bits, man_bits=pw.man_bits,
+                           signed=pw.signed, interpret=interpret)
+    else:
+        assert act_qp.kind == KIND_FP_SIGNED and jnp.ndim(act_qp.maxval) == 0
+        out = w4a4_matmul_2d(
+            patches, pw.packed, pw.scale, pw.zero_point,
+            act_qp.maxval, act_qp.zero_point,
+            exp_bits=pw.exp_bits, man_bits=pw.man_bits, signed=pw.signed,
+            act_exp_bits=act_qp.exp_bits, act_man_bits=act_qp.man_bits,
+            act_signed=True, interpret=interpret)
+    return out.reshape(b, oh, ow, cout)

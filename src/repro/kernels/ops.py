@@ -30,8 +30,12 @@ def _interpret() -> bool:
 
 
 def msfp_quantize(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
-    """Fused fake-quant (no STE — serving path; training uses quant.ste_qdq)."""
-    if _use_pallas() and qp.kind != 2:
+    """Fused fake-quant (no STE — serving path; training uses quant.ste_qdq).
+
+    The Pallas kernel takes per-tensor FP parameters; INT-affine and
+    vector (per-channel) maxvals fall back to the XLA reference.
+    """
+    if _use_pallas() and qp.kind != 2 and jnp.ndim(qp.maxval) == 0:
         from repro.kernels.msfp_quant import msfp_qdq
         return msfp_qdq(x, qp, interpret=_interpret())
     return _ref.ref_msfp_qdq(x, qp)
@@ -91,6 +95,36 @@ def w4a4_matmul(x: jnp.ndarray, pw: PackedW4,
     else:
         out = _ref.ref_w4a4_matmul(x2, pw, act_qp, x.dtype)
     return out.reshape(*lead, out.shape[-1])
+
+
+def _normalize_stride(stride) -> tuple[int, int]:
+    return (stride, stride) if isinstance(stride, int) else tuple(stride)
+
+
+def w4a4_conv2d(x: jnp.ndarray, pw: PackedW4,
+                act_qp: QuantizerParams | None = None, *,
+                stride=1, padding="SAME") -> jnp.ndarray:
+    """NHWC conv on a packed HWIO W4 weight via im2col + fused matmul.
+
+    The Pallas route unfolds x into the (B*OH*OW, kh*kw*cin) patch matrix
+    matching the 2D conv pack layout and applies the MSFP act snap to the
+    patch tiles in VMEM (``w4a4_matmul_2d``). Only signed per-tensor act
+    quantizers fuse: SAME padding's zeros must stay exactly zero through
+    the snap, and unsigned grids map 0 to the zero-point — those (and
+    INT-affine) pre-quantize x with ``msfp_quantize`` and run the plain
+    packed matmul. Fallback elsewhere is the jnp oracle (decode + conv).
+    """
+    strides = _normalize_stride(stride)
+    if act_qp is not None and not (act_qp.kind == KIND_FP_SIGNED
+                                   and jnp.ndim(act_qp.maxval) == 0):
+        x = msfp_quantize(x, act_qp)
+        act_qp = None
+    if _use_pallas() and len(pw.shape) == 4 and _pallas_w4_ok(pw):
+        from repro.kernels.conv import w4a4_conv2d_im2col
+        return w4a4_conv2d_im2col(x, pw, act_qp, stride=strides,
+                                  padding=padding, interpret=_interpret())
+    return _ref.ref_w4a4_conv2d(x, pw, act_qp, stride=strides,
+                                padding=padding, dtype=x.dtype)
 
 
 def kv4_encode(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:

@@ -2,8 +2,10 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
+from jax import lax
 
-from repro.core.qmodule import PackedW4, decode_codes, unpack_nibbles
+from repro.core.qmodule import (PackedW4, decode_codes, dequant_weight,
+                                unpack_nibbles)
 from repro.quant.fakequant import QuantizerParams, apply_qdq
 from repro.quant.formats import FPFormat
 
@@ -27,6 +29,25 @@ def ref_w4a4_matmul(x: jnp.ndarray, pw: PackedW4, act_qp: QuantizerParams,
                     dtype=jnp.bfloat16) -> jnp.ndarray:
     """Oracle for the fused W4A4 kernel: qdq(x) through HBM, then matmul."""
     return ref_w4_matmul(apply_qdq(x, act_qp), pw, dtype)
+
+
+def ref_w4a4_conv2d(x: jnp.ndarray, pw: PackedW4,
+                    act_qp: QuantizerParams | None = None, *,
+                    stride: tuple[int, int] = (1, 1), padding="SAME",
+                    dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Oracle for the im2col conv route: qdq(x), decode W, XLA conv.
+
+    Act quant precedes the conv's zero padding — the fake-quant model's
+    order — which the fused route matches (signed snaps keep 0 at 0;
+    unsigned acts are pre-quantized by the dispatcher).
+    """
+    if act_qp is not None:
+        x = apply_qdq(x, act_qp)
+    w = dequant_weight(pw, jnp.float32)   # reshaped back to HWIO
+    y = lax.conv_general_dilated(
+        x.astype(jnp.float32), w, window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y.astype(dtype)
 
 
 def ref_kv4_encode(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:

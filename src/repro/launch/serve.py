@@ -59,12 +59,14 @@ def main(argv=None) -> None:
             print(f"quantized to W4 ({args.quant}) in {time.time() - t0:.1f}s")
         ctx = None
         if args.act_quant == "fp4" and args.quant == "bf16":
-            print("warning: --act-quant fp4 has no effect with --quant bf16 "
-                  "(fused activation quant runs inside the packed W4 "
-                  "matmul); pass --quant w4 or w4pc")
+            print("note: --act-quant fp4 with --quant bf16 quantizes "
+                  "activations in a standalone msfp pass (A4 only; no "
+                  "packed weights to fuse into)")
         if args.act_quant == "fp4":
             # Fused W4A4: every packed dense site quantizes its input to
-            # signed E2M1 inside the matmul kernel (no separate qdq pass).
+            # signed E2M1 inside the matmul kernel (no separate qdq pass);
+            # bf16-fallback sites quantize in a standalone pass so serving
+            # numerics track the fake-quant model at every act site.
             qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
                                  jnp.float32(args.act_maxval))
             ctx = QuantContext("serve", act_qps={"*": qp})

@@ -142,6 +142,25 @@ def main(argv=None) -> None:
           f"{s['bank_evictions']} evictions, cap {args.bank_cap}), "
           f"{s['bank_packed_sites']} packed / {s['bank_fallback_sites']} "
           f"bf16-fallback sites")
+    print(f"jit cache: {s['compiled_forwards']} compiled forwards "
+          f"(buckets {s['buckets']}), {s['padded_samples']} padded samples, "
+          f"{s['idle_sleeps']} idle sleeps")
+
+    # conv parity: every even-width non-io conv weight must serve packed
+    # (the im2col W4A4 route), never from the bf16 fallback bucket.
+    from repro.common.tree import flatten_paths
+    flat_q = dict(flatten_paths(q_params))
+    conv_w = [k for k, v in flat_q.items()
+              if k.endswith("/w") and getattr(v, "ndim", 0) == 4]
+    packed_sites = set(bank.pack_stats["packed"])
+    n_conv_packed = sum(k in packed_sites for k in conv_w)
+    print(f"conv sites: {n_conv_packed}/{len(conv_w)} packed (im2col W4A4)")
+    if args.plan == "absmax":
+        missing = [k for k in conv_w
+                   if k not in io_sites(q_params)
+                   and flat_q[k].shape[-1] % 2 == 0
+                   and k not in packed_sites]
+        assert not missing, f"conv sites fell back to bf16: {missing}"
 
 
 if __name__ == "__main__":

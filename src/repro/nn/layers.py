@@ -44,18 +44,22 @@ def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
 
 def dense_apply(p: dict, x: jnp.ndarray, *, ctx: QuantContext | None = None,
                 site: str | None = None, act_qp=None) -> jnp.ndarray:
-    """``act_qp`` (a ``QuantizerParams``) requests fused W4A4 serving: the
-    activation is MSFP-quantized inside the packed matmul kernel instead of
-    in a separate pass. It applies only to PackedW4 weights; a serve-mode
-    ``ctx`` can supply it per site when the caller doesn't."""
+    """``act_qp`` (a ``QuantizerParams``) requests serve-mode activation
+    quantization: fused into the packed matmul kernel for PackedW4 weights,
+    a standalone ``msfp_quantize`` pass for dense (bf16-fallback) weights —
+    so serving matches the fake-quant oracle at every planned act site. A
+    serve-mode ``ctx`` can supply it per site when the caller doesn't."""
     x = _maybe_quant_act(ctx, site, x)
     w = p["w"]
+    if act_qp is None and ctx is not None:
+        act_qp = ctx.serving_qp(site)  # site=None still gets the '*' qp
     if isinstance(w, PackedW4):
         from repro.kernels import ops  # late import; kernels depend on nn types
-        if act_qp is None and ctx is not None:
-            act_qp = ctx.serving_qp(site)  # site=None still gets the '*' qp
         y = ops.w4a4_matmul(x, w, act_qp)
     else:
+        if act_qp is not None:
+            from repro.kernels import ops
+            x = ops.msfp_quantize(x, act_qp)
         y = x @ w.astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
@@ -81,15 +85,26 @@ def conv2d_init(key, c_in: int, c_out: int, kernel: int = 3, *,
 def conv2d_apply(p: dict, x: jnp.ndarray, *, stride: int = 1,
                  padding: str | Sequence = "SAME",
                  ctx: QuantContext | None = None,
-                 site: str | None = None) -> jnp.ndarray:
+                 site: str | None = None, act_qp=None) -> jnp.ndarray:
+    """Mirrors ``dense_apply``'s serving contract: PackedW4 weights route
+    through the im2col W4A4 conv kernel (never decode-then-XLA-conv), and
+    ``act_qp`` / serve-mode ``ctx.serving_qp`` quantizes the input either
+    inside that kernel or, for dense-fallback weights, in a standalone
+    pass — conv sites see the same numerics the fake-quant model did."""
     x = _maybe_quant_act(ctx, site, x)
     w = p["w"]
+    if act_qp is None and ctx is not None:
+        act_qp = ctx.serving_qp(site)
     if isinstance(w, PackedW4):
-        from repro.core.qmodule import dequant_weight
-        w = dequant_weight(w, x.dtype)
-    y = lax.conv_general_dilated(
-        x, w.astype(x.dtype), window_strides=(stride, stride), padding=padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        from repro.kernels import ops
+        y = ops.w4a4_conv2d(x, w, act_qp, stride=stride, padding=padding)
+    else:
+        if act_qp is not None:
+            from repro.kernels import ops
+            x = ops.msfp_quantize(x, act_qp)
+        y = lax.conv_general_dilated(
+            x, w.astype(x.dtype), window_strides=(stride, stride),
+            padding=padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y

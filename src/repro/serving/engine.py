@@ -10,7 +10,9 @@ One engine *tick*:
      stay inside a routing segment),
   4. run ONE batched model forward per class-conditioning partition
      (per-sample ``t``; CFG-guided requests contribute a cond + uncond
-     pair and are recombined as ``eps_u + s * (eps_c - eps_u)``),
+     pair and are recombined as ``eps_u + s * (eps_c - eps_u)``) — batches
+     pad to power-of-two buckets (outputs masked by slicing) so the jit
+     cache stays bounded under churny in-flight counts,
   5. advance each request's sampler state; retire finished requests.
 
 The forward runs under a *serve-mode* ``QuantContext`` — activation
@@ -63,6 +65,8 @@ class DiffusionServingEngine:
         self.tick_count = 0
         self.n_forwards = 0
         self.n_samples_batched = 0
+        self.n_padded_samples = 0
+        self.n_idle_sleeps = 0
         self.n_finished = 0
         self._latencies: list[float] = []    # scalars only; never evicted
         self.results: dict[int, RequestState] = {}
@@ -157,8 +161,29 @@ class DiffusionServingEngine:
                 eps_by_item.setdefault(id(rs), {})[role] = eps[j:j + 1]
         return eps_by_item
 
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Smallest power of two >= n — pads partition batches so churny
+        in-flight counts reuse a handful of compiled forwards instead of
+        one jit entry per distinct batch size."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
     def _forward(self, params, x, tb, y):
-        key = (x.shape[0], y is not None)
+        n = x.shape[0]
+        b = self._bucket(n)
+        if b != n:
+            # Pad with copies of row 0 (always finite through norms) and
+            # mask by slicing the padded outputs away below.
+            pad = b - n
+            x = jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)], axis=0)
+            tb = jnp.concatenate([tb, jnp.repeat(tb[:1], pad)], axis=0)
+            if y is not None:
+                y = jnp.concatenate([y, jnp.repeat(y[:1], pad)], axis=0)
+            self.n_padded_samples += pad
+        key = (b, y is not None)
         if key not in self._jit:
             if y is None:
                 self._jit[key] = jax.jit(
@@ -167,7 +192,8 @@ class DiffusionServingEngine:
                 self._jit[key] = jax.jit(
                     lambda p, x, tb, y: self._apply(p, x, tb, y, self.ctx))
         fn = self._jit[key]
-        return fn(params, x, tb) if y is None else fn(params, x, tb, y)
+        eps = fn(params, x, tb) if y is None else fn(params, x, tb, y)
+        return eps[:n]
 
     def pop_result(self, rid: int) -> RequestState:
         """Hand a finished request to its caller and release the engine's
@@ -177,15 +203,23 @@ class DiffusionServingEngine:
 
     # -- driver ------------------------------------------------------------
 
-    def run(self, *, poll_sleep: float = 0.002) -> dict[int, RequestState]:
-        """Tick until every submitted request has finished."""
+    def run(self, *, max_idle_sleep: float = 0.25) -> dict[int, RequestState]:
+        """Tick until every submitted request has finished.
+
+        While idle (nothing in flight, next arrival in the future) the
+        driver sleeps until that arrival in one shot — capped at
+        ``max_idle_sleep`` as a clock-skew guard — instead of spinning a
+        millisecond poll loop. Admission order is unchanged: the batcher
+        admits FIFO by (arrival, rid) whenever ``tick`` runs.
+        """
         while self.batcher.pending or self.batcher.inflight:
             self.tick()
             if not self.batcher.inflight and self.batcher.pending:
                 nxt = self.batcher.next_arrival()
                 wait = nxt - self._now()
                 if wait > 0:
-                    time.sleep(min(wait, max(poll_sleep, 0.0)))
+                    time.sleep(min(wait, max(max_idle_sleep, 0.0)))
+                    self.n_idle_sleeps += 1
         return self.results
 
     # -- metrics -----------------------------------------------------------
@@ -199,10 +233,15 @@ class DiffusionServingEngine:
             k = min(len(lat) - 1, int(round(p / 100 * (len(lat) - 1))))
             return lat[k]
 
+        buckets = sorted({k[0] for k in self._jit})
         d = {"requests": self.n_finished, "ticks": self.tick_count,
              "forwards": self.n_forwards,
              "mean_batch": (self.n_samples_batched / self.n_forwards
                             if self.n_forwards else 0.0),
+             "compiled_forwards": len(self._jit),
+             "buckets": buckets,
+             "padded_samples": self.n_padded_samples,
+             "idle_sleeps": self.n_idle_sleeps,
              "p50_s": pct(50), "p95_s": pct(95), "p99_s": pct(99)}
         d.update({f"bank_{k}": v for k, v in self.bank.describe().items()})
         return d

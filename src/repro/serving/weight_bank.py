@@ -78,7 +78,8 @@ def _packable(site: str, w, plan: QuantPlan) -> bool:
     if getattr(w, "ndim", 0) < 2 or w.shape[-1] % 2 != 0:
         return False
     mv = jnp.asarray(qp.maxval)
-    if mv.ndim == 1 and not (w.ndim == 2 and mv.shape[0] == w.shape[-1]):
+    if mv.ndim == 1 and not (w.ndim in (2, 4)          # dense or HWIO conv
+                             and mv.shape[0] == w.shape[-1]):
         return False
     return mv.ndim <= 1
 
@@ -87,6 +88,10 @@ def pack_param_tree(params: dict, plan: QuantPlan, *,
                     fallback_dtype=jnp.bfloat16) -> tuple[dict, dict]:
     """Pack every plan-covered 4-bit FP weight; bf16 the rest of the planned
     weights; leave unplanned leaves (biases, norms) untouched.
+
+    HWIO conv weights pack as their (kh*kw*cin, cout) flattening (see
+    ``pack_weight``), so conv sites ride the same im2col Pallas matmul
+    route as dense sites instead of the bf16-fallback bucket.
 
     Returns (tree, stats) with stats = {'packed': [...], 'fallback': [...]}.
     """

@@ -275,6 +275,181 @@ def test_mlp_apply_act_qps_threading(monkeypatch, rng):
     assert calls == [qp_any, qp_any, qp_down]  # gate, up, down
 
 
+# ---------------------------------------------------------------------------
+# im2col conv route: packed HWIO convs through the fused W4A4 matmul
+# ---------------------------------------------------------------------------
+
+
+def _pack_conv(w4d, e=2, m=1):
+    mv = jnp.maximum(jnp.max(jnp.abs(w4d)).astype(jnp.float32), 1e-6)
+    return pack_weight(w4d, QuantizerParams(KIND_FP_SIGNED, e, m, 4, mv))
+
+
+@pytest.mark.parametrize("kernel,stride,padding",
+                         [(3, 1, "SAME"), (3, 2, "SAME"), (1, 1, "SAME"),
+                          (1, 2, "SAME"), (3, 1, "VALID"), (3, 2, "VALID")])
+def test_w4a4_conv2d_matches_ref_and_xla_conv(kernel, stride, padding, rng):
+    """Interpret-mode conv route vs the jnp oracle AND vs lax.conv on the
+    dequantized (reshaped-back-to-HWIO) weights."""
+    from jax import lax
+
+    from repro.core.qmodule import dequant_weight
+    from repro.quant.fakequant import apply_qdq
+
+    cin, cout = 6, 10
+    w = jnp.asarray(rng.normal(size=(kernel, kernel, cin, cout))
+                    .astype(np.float32))
+    pw = _pack_conv(w)
+    # conv weights pack as their 2D GEMM flattening, original shape kept
+    assert pw.packed.shape == (kernel * kernel * cin, cout // 2)
+    assert pw.shape == w.shape
+    x = jnp.asarray(rng.normal(size=(2, 9, 9, cin)).astype(np.float32)) * 0.3
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(1.0))
+    out = ops.w4a4_conv2d(x, pw, act_qp, stride=stride, padding=padding)
+    want = ref.ref_w4a4_conv2d(x, pw, act_qp, stride=(stride, stride),
+                               padding=padding, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=5e-4)
+    want_xla = lax.conv_general_dilated(
+        apply_qdq(x, act_qp), dequant_weight(pw, jnp.float32),
+        (stride, stride), padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_xla),
+                               atol=2e-5, rtol=5e-4)
+
+
+def test_w4a4_conv2d_unsigned_act_same_padding(rng):
+    """Unsigned act grids map 0 to the zero-point, so the dispatcher must
+    pre-quantize x (quantize-then-pad order) rather than snap the zero-
+    padded patch entries in-kernel — SAME padding is the regression."""
+    w = jnp.asarray(np.abs(rng.normal(size=(3, 3, 6, 8))).astype(np.float32))
+    pw = _pack_conv(w)
+    x = jnp.asarray(rng.normal(size=(1, 7, 7, 6)).astype(np.float32)) * 0.3
+    act_qp = QuantizerParams(KIND_FP_UNSIGNED, 2, 2, 4, jnp.float32(1.5),
+                             jnp.float32(-0.15))
+    out = ops.w4a4_conv2d(x, pw, act_qp, stride=1, padding="SAME")
+    want = ref.ref_w4a4_conv2d(x, pw, act_qp, stride=(1, 1), padding="SAME",
+                               dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=5e-4)
+
+
+def test_w4a4_conv2d_vector_act_maxval_falls_back(rng):
+    """A per-channel (vector-maxval) act quantizer can't ride the per-
+    tensor Pallas snap; the pre-quantize pass must degrade to the XLA
+    ref instead of crashing (regression: msfp_quantize Pallas gating)."""
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    pw = _pack_conv(w)
+    x = jnp.asarray(rng.normal(size=(1, 5, 5, 4)).astype(np.float32)) * 0.3
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
+                             jnp.full((4,), 1.0, jnp.float32))
+    out = ops.w4a4_conv2d(x, pw, act_qp, stride=1, padding="SAME")
+    want = ref.ref_w4a4_conv2d(x, pw, act_qp, stride=(1, 1), padding="SAME",
+                               dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=5e-4)
+
+
+def test_w4a4_conv2d_per_channel_scale_and_bf16(rng):
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 6)).astype(np.float32)) * 0.1
+    mv = jnp.maximum(jnp.max(jnp.abs(w), axis=(0, 1, 2)), 1e-6)
+    pw = pack_weight(w, QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, mv))
+    assert pw.scale.shape == (6,)
+    x = jnp.asarray(rng.normal(size=(2, 5, 5, 4)).astype(np.float32)
+                    * 0.3).astype(jnp.bfloat16)
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(1.0))
+    out = ops.w4a4_conv2d(x, pw, act_qp, stride=1, padding="SAME")
+    want = ref.ref_w4a4_conv2d(x, pw, act_qp, stride=(1, 1), padding="SAME",
+                               dtype=jnp.bfloat16)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=1e-2, rtol=2e-2)
+
+
+def test_w4a4_conv2d_dispatch_never_decodes(monkeypatch, rng):
+    """Packed conv weights (scalar or per-channel scale, signed act fused
+    or None) must hit the Pallas im2col route, not the decode-then-conv
+    oracle fallback."""
+
+    def boom(*a, **k):
+        raise AssertionError("w4a4_conv2d fell back to decode-then-conv")
+
+    monkeypatch.setattr(ops._ref, "ref_w4a4_conv2d", boom)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(1, 6, 6, 4)).astype(np.float32))
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+    pw = _pack_conv(w)
+    assert ops.w4a4_conv2d(x, pw, act_qp).shape == (1, 6, 6, 8)
+    assert ops.w4a4_conv2d(x, pw, None, stride=2).shape == (1, 3, 3, 8)
+    mv = jnp.maximum(jnp.max(jnp.abs(w), axis=(0, 1, 2)), 1e-6)
+    pc = pack_weight(w, QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, mv))
+    assert ops.w4a4_conv2d(x, pc, act_qp).shape == (1, 6, 6, 8)
+
+
+def test_conv2d_apply_serve_ctx_routes_to_conv_kernel(monkeypatch, rng):
+    """A serve-mode QuantContext hands packed conv layers their act params
+    and routes through ops.w4a4_conv2d — never dequant + XLA conv."""
+    from repro.nn.layers import conv2d_apply
+    from repro.quant.calibrate import QuantContext
+
+    qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    pw = _pack_conv(w)
+    x = jnp.asarray(rng.normal(size=(2, 6, 6, 4)).astype(np.float32))
+    seen = {}
+    real = ops.w4a4_conv2d
+
+    def spy(x_, pw_, act_qp_, **kw):
+        seen["act_qp"] = act_qp_
+        return real(x_, pw_, act_qp_, **kw)
+
+    monkeypatch.setattr(ops, "w4a4_conv2d", spy)
+    ctx = QuantContext("serve", act_qps={"*": qp})
+    out = conv2d_apply({"w": pw}, x, ctx=ctx, site="res/conv1")
+    assert out.shape == (2, 6, 6, 8)
+    assert seen["act_qp"] is qp
+    seen.clear()
+    conv2d_apply({"w": pw}, x, ctx=QuantContext("off"), site="res/conv1")
+    assert seen["act_qp"] is None
+
+
+def test_unpacked_sites_quantize_acts_in_serve_mode(monkeypatch, rng):
+    """bf16-fallback dense/conv sites must still quantize their input in
+    serve mode (standalone msfp pass) so serving matches the fake-quant
+    oracle at every planned act site (regression: they skipped it)."""
+    from repro.nn.layers import conv2d_apply, dense_apply
+    from repro.quant.calibrate import QuantContext
+    from repro.quant.fakequant import apply_qdq
+
+    qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+    calls = []
+    real = ops.msfp_quantize
+
+    def spy(x_, qp_):
+        calls.append(qp_)
+        return real(x_, qp_)
+
+    monkeypatch.setattr(ops, "msfp_quantize", spy)
+    ctx = QuantContext("serve", act_qps={"*": qp})
+    xd = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    wd = jnp.asarray(rng.normal(size=(8, 6)).astype(np.float32))
+    out = dense_apply({"w": wd}, xd, ctx=ctx, site="io/head")
+    assert calls == [qp]
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(apply_qdq(xd, qp) @ wd),
+                               atol=1e-6)
+    calls.clear()
+    xc = jnp.asarray(rng.normal(size=(1, 5, 5, 3)).astype(np.float32))
+    wc = jnp.asarray(rng.normal(size=(3, 3, 3, 7)).astype(np.float32))
+    conv2d_apply({"w": wc}, xc, ctx=ctx, site="conv_in")  # odd cout: dense
+    assert calls == [qp]
+    # no ctx / off mode: the plain unquantized path is untouched
+    calls.clear()
+    dense_apply({"w": wd}, xd)
+    conv2d_apply({"w": wc}, xc, ctx=QuantContext("off"), site="conv_in")
+    assert calls == []
+
+
 def test_w4_matmul_3d_input(rng):
     qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(1.0))
     w = jnp.asarray(rng.normal(size=(32, 48)).astype(np.float32))
