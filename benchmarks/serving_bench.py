@@ -4,10 +4,15 @@ Replays a burst of concurrent generation requests through the diffusion
 serving engine (tiny UNet, XLA packed path on CPU) and emits rows under
 the kernel-bench JSON conventions (name, us_per_call, derived) — the
 derived column carries throughput and segment-cache hit rate, plus a
-cold-vs-warm row for the weight bank's merge+pack build.
+cold-vs-warm row for the weight bank's merge+pack build, plus one
+``traffic_<scenario>`` row per registry scenario (open-loop arrival
+shapes, the closed-loop think-time workload, and the deadline/priority
+mix) so the perf trajectory has traffic-level numbers to regress
+against.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -21,11 +26,22 @@ from repro.nn.unet import io_sites, unet_init
 from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
 from repro.serving import (DiffusionServingEngine, WeightBank,
                            absmax_talora_setup)
+from repro.serving.traffic import get_scenario, run_scenario
 
 IMG = 8
 T = 50
 N_REQ = 6
 STEPS = 4
+
+# scenarios shrunk to bench scale: 4-6 requests, 2-3 sampler steps each
+BENCH_SCENARIOS = ("steady", "burst", "diurnal", "heavy_tail",
+                   "closed_loop", "deadline_mix")
+
+
+def _bench_scale(scn):
+    mix = dataclasses.replace(scn.mix, steps=2, steps_jitter=1)
+    return dataclasses.replace(scn, mix=mix, n_requests=4, n_users=2,
+                               requests_per_user=2, think_mean_s=0.05)
 
 
 def _setup(key):
@@ -89,6 +105,29 @@ def rows(log=print) -> list[dict]:
     out.append({"name": "serving_engine_1req_tiny_ddim8_ref",
                 "us_per_call": wall1 * 1e6 / max(evals1, 1),
                 "derived": "per-eval baseline (batch=1)"})
+
+    # traffic scenarios: one row per registry entry (arrival shape x SLO)
+    for name in BENCH_SCENARIOS:
+        scn = _bench_scale(get_scenario(name))
+        bank_s = WeightBank(params, plan, hubs, router, tcfg, T,
+                            max_cached=bank.n_segments)
+        eng = DiffusionServingEngine(cfg, sched, bank_s,
+                                     act_qps={"*": act_qp},
+                                     max_batch=scn.max_batch)
+        summary = run_scenario(scn, eng, seed=0)
+        evals = sum(rs.n_evals for rs in eng.results.values())
+        slo = summary["slo"]
+        verdict = ("no-slo" if not slo["checks"]
+                   else "slo-pass" if slo["passed"] else "slo-FAIL")
+        out.append({
+            "name": f"traffic_{name}",
+            "us_per_call": summary["wall_s"] * 1e6 / max(evals, 1),
+            "derived": f"{summary['throughput_rps']:.2f} req/s; "
+                       f"p95 {summary['p95_s']:.2f}s; goodput "
+                       f"{summary['goodput_frac']:.2f} "
+                       f"({summary['expired']} expired); {verdict}; "
+                       f"hit-rate {eng.stats()['bank_hit_rate']:.2f}; "
+                       f"{eng.stats()['prefetch_hits']} prefetch hits"})
 
     for r in out:
         log(f"  {r['name']},{r['us_per_call']:.0f}us,{r['derived']}")

@@ -1,13 +1,25 @@
-"""Diffusion serving launcher: Poisson-trace replay through the engine.
+"""Diffusion serving launcher: trace replay / scenario runs on the engine.
 
 Quantizes a UNet preset to real packed FP4 (TALoRA-merged per routing
-segment via the weight bank), then replays a synthetic Poisson arrival
-trace of generation requests through the continuous-batching engine and
-reports throughput, latency percentiles, and segment-cache behavior.
+segment via the weight bank), then feeds the continuous-batching engine
+one of:
+
+  * ``--trace file.jsonl``  — replay a recorded/generated trace file,
+  * ``--scenario name``     — a named workload from the traffic registry
+    (``steady`` | ``burst`` | ``diurnal`` | ``heavy_tail`` |
+    ``closed_loop`` | ``deadline_mix`` | ``golden``; default steady),
+
+and reports sliding-window + whole-run SLO metrics (throughput, latency
+percentiles from arrival, goodput vs per-request deadlines, queue depth,
+segment-cache and prefetch behavior), plus a deterministic outcome
+digest — two replays of the same trace under ``--replay-clock virtual``
+must print the same digest.
 
     PYTHONPATH=src python -m repro.launch.serve_diffusion --smoke \
-        --requests 2 --max-batch 2 --kernels interpret
+        --scenario golden --kernels interpret --replay-clock virtual
 
+``--save-trace out.jsonl`` captures whatever workload actually ran
+(including closed-loop realized arrivals) back into a replayable trace.
 ``--plan absmax`` (default) builds the calibration-free abs-max FP4 plan;
 ``--plan search`` runs the paper's calibrate + MSE-search pipeline first
 (slow — minutes on CPU).
@@ -15,6 +27,8 @@ reports throughput, latency percentiles, and segment-cache behavior.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import hashlib
 import time
 
 import jax
@@ -27,8 +41,11 @@ from repro.diffusion.schedule import make_schedule
 from repro.kernels import ops
 from repro.nn.unet import io_sites, unet_init
 from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
-from repro.serving import (DiffusionServingEngine, WeightBank,
+from repro.serving import (DiffusionServingEngine, VirtualClock, WeightBank,
                            absmax_talora_setup, act_qps_from_plan)
+from repro.serving.traffic import (MetricsCollector, Scenario, TraceWriter,
+                                   get_scenario, list_scenarios, load_trace,
+                                   run_scenario)
 
 
 def build_quantized(cfg, sched, key, *, plan_mode: str, talora_cfg):
@@ -44,10 +61,69 @@ def build_quantized(cfg, sched, key, *, plan_mode: str, talora_cfg):
     return params, plan, hubs, router
 
 
-def poisson_trace(n: int, rate: float, seed: int) -> np.ndarray:
-    """Cumulative arrival times (seconds) for n requests at `rate` req/s."""
-    rng = np.random.default_rng(seed)
-    return np.cumsum(rng.exponential(1.0 / max(rate, 1e-9), size=n))
+def outcome_digest(results) -> str:
+    """Deterministic digest of per-request outcomes (step counts, final
+    latents, expiry) — the replay-determinism check compares this line
+    across runs of the same trace."""
+    h = hashlib.sha256()
+    for rid in sorted(results):
+        rs = results[rid]
+        h.update(f"{rid}:{rs.n_evals}:{int(rs.expired)}".encode())
+        if rs.x0 is not None:
+            h.update(np.asarray(rs.x0, np.float32).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _warn_ignored_shaping(args) -> None:
+    ignored = [f for f, v in (("--steps", args.steps),
+                              ("--steps-jitter", args.steps_jitter),
+                              ("--eta", args.eta),
+                              ("--samplers", args.samplers),
+                              ("--requests", args.requests),
+                              ("--rate", args.rate)) if v is not None]
+    if ignored:
+        print(f"note: {', '.join(ignored)} ignored — a trace replays its "
+              "recorded requests verbatim")
+
+
+def _scenario_from_args(args) -> Scenario:
+    if args.trace:
+        _warn_ignored_shaping(args)
+        return Scenario(name=f"trace:{args.trace}", kind="trace",
+                        desc="ad-hoc trace replay", trace_path=args.trace)
+    scn = get_scenario(args.scenario)
+    if scn.kind == "trace":        # e.g. the golden fixture scenario
+        _warn_ignored_shaping(args)
+        return scn
+    mix = scn.mix
+    if args.steps is not None:
+        mix = dataclasses.replace(mix, steps=args.steps)
+    if args.steps_jitter is not None:
+        mix = dataclasses.replace(mix, steps_jitter=args.steps_jitter)
+    if args.eta is not None:
+        mix = dataclasses.replace(mix, eta=args.eta)
+    if args.samplers is not None:
+        mix = dataclasses.replace(mix, samplers=tuple(
+            args.samplers.split(",")))
+    scn = dataclasses.replace(scn, mix=mix)
+    if args.requests is not None:
+        scn = dataclasses.replace(scn, n_requests=args.requests)
+    if args.rate is not None and scn.kind == "open":
+        kw = dict(scn.gen_kw)
+        if "rate" in kw:
+            kw["rate"] = args.rate
+            scn = dataclasses.replace(scn, gen_kw=tuple(kw.items()))
+        else:
+            print(f"note: --rate ignored for generator {scn.gen!r} "
+                  f"(tune {sorted(kw)} via the registry)")
+    if args.smoke and scn.kind != "trace":
+        scn = dataclasses.replace(
+            scn, n_requests=min(scn.n_requests, 2), n_users=2,
+            requests_per_user=1,
+            mix=dataclasses.replace(scn.mix, steps=min(scn.mix.steps, 3),
+                                    steps_jitter=min(scn.mix.steps_jitter,
+                                                     1)))
+    return scn
 
 
 def main(argv=None) -> None:
@@ -57,20 +133,42 @@ def main(argv=None) -> None:
     ap.add_argument("--image-size", type=int, default=16,
                     help="tiny-ddim only; other presets fix their size")
     ap.add_argument("--T", type=int, default=100, help="schedule length")
-    ap.add_argument("--steps", type=int, default=10,
-                    help="base sampler steps per request")
-    ap.add_argument("--steps-jitter", type=int, default=2,
-                    help="request i runs steps + (i %% (jitter+1)) steps")
-    ap.add_argument("--eta", type=float, default=0.0)
-    ap.add_argument("--samplers", default="ddim",
+    src = ap.add_mutually_exclusive_group()
+    src.add_argument("--trace", default=None,
+                     help="replay a recorded JSONL trace file")
+    src.add_argument("--scenario", default="steady",
+                     choices=list_scenarios(),
+                     help="named workload from the traffic registry")
+    ap.add_argument("--save-trace", default=None,
+                    help="capture the run's submissions to a trace file")
+    ap.add_argument("--replay-clock", default="wall",
+                    choices=["wall", "virtual"],
+                    help="virtual: deterministic admission/batching "
+                         "(replay checks); wall: real SLO timing")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="override the scenario's open-loop request count")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="override the scenario's arrival rate (req/s), "
+                         "generators with a 'rate' knob only")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override base sampler steps per request")
+    ap.add_argument("--steps-jitter", type=int, default=None)
+    ap.add_argument("--eta", type=float, default=None)
+    ap.add_argument("--samplers", default=None,
                     help="comma list cycled across requests "
                          "(ddim,plms,dpm_solver2)")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--rate", type=float, default=20.0,
-                    help="Poisson arrival rate, requests/s")
-    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="in-flight slots (default: the scenario's "
+                         "max_batch hint)")
+    ap.add_argument("--max-idle-sleep", type=float, default=0.25,
+                    help="cap (s) on one idle sleep while waiting for the "
+                         "next arrival")
+    ap.add_argument("--metrics-window", type=float, default=1.0,
+                    help="sliding-window width (s) for the metrics report")
     ap.add_argument("--bank-cap", type=int, default=4,
                     help="LRU cap on cached segment weight-sets")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable eager next-segment weight-bank builds")
     ap.add_argument("--plan", default="absmax", choices=["absmax", "search"])
     ap.add_argument("--act-quant", default="fp4", choices=["off", "fp4"],
                     help="fp4 = fuse E2M1 act quant into packed matmuls")
@@ -87,9 +185,12 @@ def main(argv=None) -> None:
     if args.smoke:
         args.image_size = min(args.image_size, 8)
         args.T = min(args.T, 50)
-        args.steps = min(args.steps, 3)
-        args.requests = min(args.requests, 2)
-        args.max_batch = min(args.max_batch, 2)
+
+    scn = _scenario_from_args(args)
+    max_batch = (args.max_batch if args.max_batch is not None
+                 else scn.max_batch)
+    if args.smoke:
+        max_batch = min(max_batch, 2)
 
     if args.preset == "tiny-ddim":
         cfg = tiny_ddim(args.image_size)
@@ -111,37 +212,64 @@ def main(argv=None) -> None:
             KIND_FP_SIGNED, 2, 1, 4, jnp.float32(args.act_maxval)))
     elif args.act_quant == "off":
         act_qps = {}
+    clock = VirtualClock() if args.replay_clock == "virtual" else None
     engine = DiffusionServingEngine(cfg, sched, bank, act_qps=act_qps,
-                                    max_batch=args.max_batch)
+                                    max_batch=max_batch, clock=clock,
+                                    max_idle_sleep=args.max_idle_sleep,
+                                    prefetch=not args.no_prefetch)
     print(f"bank ready: {bank.n_segments} routing segments, plan={args.plan}, "
           f"kernels={args.kernels} ({time.time() - t0:.1f}s)")
+    print(f"workload: {scn.name} — {scn.desc} "
+          f"[clock={args.replay_clock}]")
 
-    samplers = args.samplers.split(",")
-    arrivals = poisson_trace(args.requests, args.rate, args.seed)
-    for i in range(args.requests):
-        engine.submit(steps=args.steps + i % (args.steps_jitter + 1),
-                      eta=args.eta, seed=args.seed + i,
-                      sampler=samplers[i % len(samplers)],
-                      arrival=float(arrivals[i]))
+    writer = None
+    if args.save_trace:
+        writer = TraceWriter(args.save_trace,
+                             meta={"scenario": scn.name,
+                                   "seed": args.seed}).attach(engine)
 
-    t0 = time.time()
-    results = engine.run()
-    wall = time.time() - t0
+    collector = MetricsCollector(window_s=args.metrics_window)
+    summary = run_scenario(scn, engine, seed=args.seed, collector=collector)
+    if writer is not None:
+        writer.close()
+        print(f"captured {writer.n} requests -> {args.save_trace}")
+    results = engine.results
     for rs in results.values():
-        assert bool(jnp.isfinite(rs.x0).all()), f"non-finite x0 rid={rs.req.rid}"
+        if not rs.expired:
+            assert bool(jnp.isfinite(rs.x0).all()), \
+                f"non-finite x0 rid={rs.req.rid}"
+
     s = engine.stats()
     evals = sum(rs.n_evals for rs in results.values())
-    print(f"served {s['requests']} requests in {wall:.2f}s "
-          f"({s['requests'] / max(wall, 1e-9):.2f} req/s, "
+    wall = summary["wall_s"]
+    print(f"served {summary['requests']} requests "
+          f"({summary['expired']} expired) in {wall:.2f}s "
+          f"({summary['requests'] / max(wall, 1e-9):.2f} req/s, "
           f"{evals / max(wall, 1e-9):.1f} denoise evals/s)")
-    print(f"latency p50={s['p50_s']:.2f}s p95={s['p95_s']:.2f}s "
-          f"p99={s['p99_s']:.2f}s  mean batch={s['mean_batch']:.2f} "
-          f"({s['forwards']} forwards / {s['ticks']} ticks)")
+    print(f"latency p50={summary['p50_s']:.2f}s p95={summary['p95_s']:.2f}s "
+          f"p99={summary['p99_s']:.2f}s  goodput={summary['goodput_frac']:.2f} "
+          f"({summary['deadline_misses']} deadline misses)")
+    print(f"batching: mean batch {s['mean_batch']:.2f} "
+          f"({s['forwards']} forwards / {s['ticks']} ticks), "
+          f"peak queue depth {summary['peak_queue_depth']}")
+    for row in collector.windows()[:8]:
+        hr = row.get("cache_hit_rate")
+        print(f"  window t={row['t']:5.1f}s: {row['throughput_rps']:6.2f} "
+              f"req/s, p95 {row['p95_s']:6.2f}s, goodput "
+              f"{row['goodput_rps']:6.2f}/s, queue {row['queue_depth']:4.1f}"
+              + (f", cache hit {hr:.2f}" if hr is not None else ""))
+    slo = summary["slo"]
+    if slo["checks"]:
+        verdict = "PASS" if slo["passed"] else "FAIL"
+        detail = ", ".join(f"{k}={c['actual']:.3g} (limit {c['limit']:.3g})"
+                           for k, c in slo["checks"].items())
+        print(f"SLO {verdict}: {detail}")
     print(f"weight bank: hit rate {s['bank_hit_rate']:.2f} "
           f"({s['bank_hits']} hits / {s['bank_misses']} misses, "
           f"{s['bank_evictions']} evictions, cap {args.bank_cap}), "
-          f"{s['bank_packed_sites']} packed / {s['bank_fallback_sites']} "
-          f"bf16-fallback sites")
+          f"{s['prefetch_hits']} prefetch hits / {s['bank_prefetches']} "
+          f"prefetches, {s['bank_packed_sites']} packed / "
+          f"{s['bank_fallback_sites']} bf16-fallback sites")
     print(f"jit cache: {s['compiled_forwards']} compiled forwards "
           f"(buckets {s['buckets']}), {s['padded_samples']} padded samples, "
           f"{s['idle_sleeps']} idle sleeps")
@@ -161,6 +289,8 @@ def main(argv=None) -> None:
                    and flat_q[k].shape[-1] % 2 == 0
                    and k not in packed_sites]
         assert not missing, f"conv sites fell back to bf16: {missing}"
+    print(f"outcome digest: {outcome_digest(results)} "
+          f"({len(results)} requests, {summary['expired']} expired)")
 
 
 if __name__ == "__main__":

@@ -11,4 +11,5 @@ from repro.serving.weight_bank import (WeightBank, Segment, segments_of,
                                        absmax_talora_setup, act_qps_from_plan,
                                        default_serving_plan)
 from repro.serving.scheduler import GenRequest, RequestState, ContinuousBatcher
-from repro.serving.engine import DiffusionServingEngine
+from repro.serving.engine import DiffusionServingEngine, VirtualClock
+from repro.serving import traffic

@@ -2,7 +2,9 @@
 
 One engine *tick*:
 
-  1. admit arrived requests into free in-flight slots (FIFO),
+  1. admit arrived requests into free in-flight slots (priority desc,
+     then FIFO; due requests past their deadline are expired instead —
+     see ``scheduler.ContinuousBatcher.admit``),
   2. group in-flight requests by the weight-bank segment of the timestep
      each sampler needs next, pick one group (scheduler policy),
   3. fetch that segment's pre-merged, pre-packed weights from the bank
@@ -19,6 +21,14 @@ The forward runs under a *serve-mode* ``QuantContext`` — activation
 quantization happens inside the fused W4A4 kernel for packed dense sites
 and there is no fake-quant anywhere on this path; weights are real packed
 uint8 nibbles end-to-end (``kernels/ops`` dispatch).
+
+The engine exposes callback hooks for the traffic subsystem
+(``serving/traffic``): ``on_submit`` (trace capture), ``on_complete`` /
+``on_expire`` (closed-loop generators, SLO metrics), ``on_tick_end``
+(queue-depth / cache time series). After each tick it prefetches the
+weight-bank segments that in-flight samplers will need next, so a
+segment boundary crossing finds its merged+packed weights already built
+(``stats()['prefetch_hits']``).
 """
 from __future__ import annotations
 
@@ -35,10 +45,29 @@ from repro.nn.unet import UNetConfig, unet_apply
 from repro.quant.calibrate import QuantContext
 from repro.serving.scheduler import (ContinuousBatcher, GenRequest,
                                      RequestState)
+from repro.serving.traffic.metrics import percentile
 from repro.serving.weight_bank import WeightBank
 
 # role of one eval item in its request: plain, or half of a CFG pair
 _PLAIN, _UNCOND, _COND = 0, 1, 2
+
+
+class VirtualClock:
+    """Deterministic replay clock: time only moves when the idle driver
+    advances it to the next arrival, never during compute. Trace replay
+    under a virtual clock admits/batches identically across runs and
+    machines (the CI determinism check), at the cost of wall-latency
+    metrics — latencies read ~0 and deadlines never expire, so use the
+    default wall clock when measuring SLOs."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def now(self) -> float:
+        return self.t
+
+    def advance_to(self, t: float) -> None:
+        self.t = max(self.t, t)
 
 
 class DiffusionServingEngine:
@@ -49,7 +78,10 @@ class DiffusionServingEngine:
                  act_qps: dict | None = None,
                  apply_fn: Callable | None = None,
                  max_batch: int = 8, starvation_ticks: int = 4,
-                 now_fn: Callable[[], float] | None = None):
+                 now_fn: Callable[[], float] | None = None,
+                 clock: VirtualClock | None = None,
+                 max_idle_sleep: float = 0.25,
+                 prefetch: bool = True):
         self.cfg = cfg
         self.sched = sched
         self.bank = bank
@@ -58,8 +90,15 @@ class DiffusionServingEngine:
             lambda params, x, tb, y, ctx: unet_apply(params, x, tb, cfg,
                                                      y=y, ctx=ctx))
         self.batcher = ContinuousBatcher(max_batch, starvation_ticks)
-        t0 = time.monotonic()
-        self._now = now_fn or (lambda: time.monotonic() - t0)
+        if clock is not None:
+            self._now = clock.now
+            self._advance = clock.advance_to
+        else:
+            t0 = time.monotonic()
+            self._now = now_fn or (lambda: time.monotonic() - t0)
+            self._advance = None
+        self.max_idle_sleep = max_idle_sleep
+        self.prefetch_enabled = prefetch
         self._jit: dict[tuple, Callable] = {}
         self._next_rid = 0
         self.tick_count = 0
@@ -68,34 +107,57 @@ class DiffusionServingEngine:
         self.n_padded_samples = 0
         self.n_idle_sleeps = 0
         self.n_finished = 0
+        self.n_expired = 0
         self._latencies: list[float] = []    # scalars only; never evicted
         self.results: dict[int, RequestState] = {}
+        # traffic-subsystem hooks; each receives the RequestState (or the
+        # engine itself for on_tick_end)
+        self.on_submit: list[Callable] = []
+        self.on_complete: list[Callable] = []
+        self.on_expire: list[Callable] = []
+        self.on_tick_end: list[Callable] = []
+
+    def now(self) -> float:
+        return self._now()
 
     # -- request lifecycle -------------------------------------------------
 
     def submit(self, *, steps: int = 20, eta: float = 0.0, seed: int = 0,
                sampler: str = "ddim", y: int | None = None,
-               guidance_scale: float = 0.0, arrival: float = 0.0) -> int:
+               guidance_scale: float = 0.0, arrival: float = 0.0,
+               deadline: float | None = None, priority: int = 0,
+               user: int | None = None, parent: int | None = None,
+               think_s: float | None = None) -> int:
         if guidance_scale > 0 and (y is None or not self.cfg.num_classes):
             raise ValueError("guidance needs a class label y and a "
                              "class-conditional model")
         rid = self._next_rid
         self._next_rid += 1
         req = GenRequest(rid, steps, eta, seed, sampler, y, guidance_scale,
-                         arrival)
+                         arrival, deadline, priority, user, parent, think_s)
         shape = (1, self.cfg.image_size, self.cfg.image_size, self.cfg.in_ch)
         state = sampler_init(sampler, self.sched, shape,
                              jax.random.PRNGKey(seed), steps=steps, eta=eta)
-        self.batcher.submit(RequestState(req, state,
-                                         submitted_at=self._now()))
+        rs = RequestState(req, state, submitted_at=self._now())
+        self.batcher.submit(rs)
+        for cb in self.on_submit:
+            cb(rs)
         return rid
 
     # -- one engine tick ---------------------------------------------------
 
     def tick(self) -> list[RequestState]:
         now = self._now()
-        self.batcher.admit(now, self.tick_count)
+        _, expired = self.batcher.admit(now, self.tick_count)
+        for rs in expired:
+            rs.finished_at = now
+            self.results[rs.req.rid] = rs
+            self.n_expired += 1
+            for cb in self.on_expire:
+                cb(rs)
         if not self.batcher.inflight:
+            for cb in self.on_tick_end:
+                cb(self)
             return []
         groups = self.batcher.groups(
             lambda rs: self.bank.segment_of(sampler_needed_t(rs.state)))
@@ -135,7 +197,17 @@ class DiffusionServingEngine:
                 self.n_finished += 1
                 self._latencies.append(rs.latency)
                 finished.append(rs)
+                for cb in self.on_complete:
+                    cb(rs)
         self.tick_count += 1
+        if self.prefetch_enabled:
+            # Requests that just advanced may cross into a new routing
+            # segment next step — build/pack it before it is asked for.
+            for s in {self.bank.segment_of(sampler_needed_t(rs.state))
+                      for rs in members if not rs.state.done}:
+                self.bank.prefetch(s)
+        for cb in self.on_tick_end:
+            cb(self)
         return finished
 
     def _run_partitions(self, params, items) -> dict[int, dict]:
@@ -203,22 +275,37 @@ class DiffusionServingEngine:
 
     # -- driver ------------------------------------------------------------
 
-    def run(self, *, max_idle_sleep: float = 0.25) -> dict[int, RequestState]:
-        """Tick until every submitted request has finished.
+    def run(self, *, max_idle_sleep: float | None = None
+            ) -> dict[int, RequestState]:
+        """Tick until every submitted request has finished or expired.
 
         While idle (nothing in flight, next arrival in the future) the
         driver sleeps until that arrival in one shot — capped at
-        ``max_idle_sleep`` as a clock-skew guard — instead of spinning a
-        millisecond poll loop. Admission order is unchanged: the batcher
-        admits FIFO by (arrival, rid) whenever ``tick`` runs.
+        ``max_idle_sleep`` (engine default unless overridden here) as a
+        clock-skew guard — instead of spinning a millisecond poll loop.
+
+        Under a ``VirtualClock`` the driver instead advances the clock to
+        the next arrival whenever an in-flight slot is free — arrival
+        gaps are treated as instantaneous relative to service, so replay
+        batches greedily and deterministically. The trace's arrival
+        *order* and priorities still apply, but deadlines can never
+        expire (virtual time never passes a pending request's own
+        arrival) — score SLOs under the wall clock.
         """
+        cap = self.max_idle_sleep if max_idle_sleep is None else max_idle_sleep
         while self.batcher.pending or self.batcher.inflight:
-            self.tick()
-            if not self.batcher.inflight and self.batcher.pending:
+            if (self._advance is not None and self.batcher.pending
+                    and len(self.batcher.inflight) < self.batcher.max_batch):
                 nxt = self.batcher.next_arrival()
-                wait = nxt - self._now()
+                if nxt > self._now():
+                    self._advance(nxt)
+                    self.n_idle_sleeps += 1
+            self.tick()
+            if (self._advance is None and not self.batcher.inflight
+                    and self.batcher.pending):
+                wait = self.batcher.next_arrival() - self._now()
                 if wait > 0:
-                    time.sleep(min(wait, max(max_idle_sleep, 0.0)))
+                    time.sleep(min(wait, max(cap, 0.0)))
                     self.n_idle_sleeps += 1
         return self.results
 
@@ -226,15 +313,9 @@ class DiffusionServingEngine:
 
     def stats(self) -> dict:
         lat = sorted(self._latencies)
-
-        def pct(p):
-            if not lat:
-                return 0.0
-            k = min(len(lat) - 1, int(round(p / 100 * (len(lat) - 1))))
-            return lat[k]
-
         buckets = sorted({k[0] for k in self._jit})
         d = {"requests": self.n_finished, "ticks": self.tick_count,
+             "expired": self.n_expired,
              "forwards": self.n_forwards,
              "mean_batch": (self.n_samples_batched / self.n_forwards
                             if self.n_forwards else 0.0),
@@ -242,6 +323,8 @@ class DiffusionServingEngine:
              "buckets": buckets,
              "padded_samples": self.n_padded_samples,
              "idle_sleeps": self.n_idle_sleeps,
-             "p50_s": pct(50), "p95_s": pct(95), "p99_s": pct(99)}
+             "prefetch_hits": self.bank.prefetch_hits,
+             "p50_s": percentile(lat, 50), "p95_s": percentile(lat, 95),
+             "p99_s": percentile(lat, 99)}
         d.update({f"bank_{k}": v for k, v in self.bank.describe().items()})
         return d

@@ -2,9 +2,14 @@
 
 Policy (documented for the README/tests):
 
-  * **Admission** — FIFO by (arrival, rid). A request is admissible once
-    its arrival time has passed and an in-flight slot (``max_batch``) is
-    free; requests admit/retire *mid-flight*, the batch never drains.
+  * **Admission** — by (priority desc, arrival, rid); plain FIFO when
+    every request carries the default priority 0. A request is
+    admissible once its arrival time has passed and an in-flight slot
+    (``max_batch``) is free; requests admit/retire *mid-flight*, the
+    batch never drains. A due request whose ``deadline`` has already
+    passed is *expired* instead of admitted (it could not possibly meet
+    its SLO) — admitted requests always run to completion and are scored
+    against the deadline by the metrics collector instead.
   * **Grouping** — in-flight requests are grouped by the weight-bank
     segment of the timestep their sampler needs next. Requests inside a
     segment batch into one model forward even at different timesteps
@@ -36,6 +41,11 @@ class GenRequest:
     y: int | None = None            # class label (class-conditional models)
     guidance_scale: float = 0.0     # > 0 pairs a cond + uncond eval (CFG)
     arrival: float = 0.0            # seconds from trace start
+    deadline: float | None = None   # absolute SLO cutoff, seconds
+    priority: int = 0               # higher admits first under contention
+    user: int | None = None         # closed-loop session id (trace metadata)
+    parent: int | None = None       # rid whose completion triggered this one
+    think_s: float | None = None    # think time preceding this request
 
 
 @dataclasses.dataclass
@@ -50,6 +60,7 @@ class RequestState:
     last_advance_tick: int = -1
     n_evals: int = 0
     x0: jnp.ndarray | None = None
+    expired: bool = False           # refused admission past its deadline
 
     @property
     def latency(self) -> float | None:
@@ -81,16 +92,41 @@ class ContinuousBatcher:
     def next_arrival(self) -> float | None:
         return self.pending[0].req.arrival if self.pending else None
 
-    def admit(self, now: float, tick: int) -> list[RequestState]:
+    def admit(self, now: float, tick: int
+              ) -> tuple[list[RequestState], list[RequestState]]:
+        """Admit due requests into free slots; returns (admitted, expired).
+
+        Due requests whose deadline has already passed are expired
+        (removed from pending, never run) regardless of slot pressure;
+        the rest admit by (priority desc, arrival, rid).
+        """
+        # pending stays sorted by (arrival, rid): the due requests are a
+        # prefix, so a tick with nothing due costs O(1), not O(pending)
+        n_due = 0
+        while (n_due < len(self.pending)
+               and self.pending[n_due].req.arrival <= now):
+            n_due += 1
+        if not n_due:
+            return [], []
+        due = self.pending[:n_due]
+        expired = []
+        for rs in due:
+            if rs.req.deadline is not None and now > rs.req.deadline:
+                rs.expired = True
+                expired.append(rs)
         admitted = []
-        while (self.pending and len(self.inflight) < self.max_batch
-               and self.pending[0].req.arrival <= now):
-            rs = self.pending.pop(0)
+        for rs in sorted((rs for rs in due if not rs.expired),
+                         key=lambda r: (-r.req.priority, r.req.arrival,
+                                        r.req.rid)):
+            if len(self.inflight) >= self.max_batch:
+                break
             rs.admitted_at = now
             rs.last_advance_tick = tick  # freshly admitted, not starved
             self.inflight.append(rs)
             admitted.append(rs)
-        return admitted
+        taken = {id(rs) for rs in admitted} | {id(rs) for rs in expired}
+        self.pending[:n_due] = [rs for rs in due if id(rs) not in taken]
+        return admitted, expired
 
     def groups(self, seg_fn: Callable[[RequestState], int]
                ) -> dict[int, list[RequestState]]:

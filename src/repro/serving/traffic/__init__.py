@@ -1,0 +1,19 @@
+"""Traffic subsystem: replayable traces, load generators, SLO metrics,
+and the named scenario registry for the diffusion serving engine.
+
+The measurement backbone for every traffic-level perf claim: a workload
+is either a versioned JSONL trace (``trace``) or a seeded generator
+(``generators``); ``metrics.MetricsCollector`` scores the run against a
+``metrics.SLO``; ``scenarios`` binds all three under stable names the
+launcher (``--scenario``) and bench iterate over.
+"""
+from repro.serving.traffic.trace import (FORMAT, VERSION, TraceRequest,
+                                         TraceWriter, load_trace,
+                                         save_trace, submit_trace,
+                                         validate_trace)
+from repro.serving.traffic.generators import (OPEN_LOOP, ClosedLoopGenerator,
+                                              RequestMix, open_loop_trace)
+from repro.serving.traffic.metrics import SLO, MetricsCollector, percentile
+from repro.serving.traffic.scenarios import (SCENARIOS, Scenario,
+                                             build_trace, get_scenario,
+                                             list_scenarios, run_scenario)

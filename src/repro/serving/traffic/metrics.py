@@ -1,0 +1,180 @@
+"""SLO metrics for the serving engine: sliding windows + run summaries.
+
+``MetricsCollector`` hangs off the engine's callback hooks (no engine
+import — anything with ``on_complete``/``on_expire``/``on_tick_end``
+lists and a ``now()`` works) and owns every latency/throughput number
+the launcher and bench report:
+
+  * per-request: latency from *arrival* (not submit), deadline met/miss,
+    expiry (refused admission past deadline),
+  * per-tick: queue depth, in-flight count, cumulative bank hits/misses,
+  * derived: sliding-window throughput / p50 / p95 / p99 / goodput /
+    mean queue depth / window cache hit rate (``windows``), whole-run
+    ``summary``, and SLO pass/fail (``evaluate``).
+
+``percentile`` is the single nearest-rank implementation shared with
+``engine.stats()`` (previously duplicated ad-hoc in the launcher path).
+"""
+from __future__ import annotations
+
+import bisect
+import collections
+import dataclasses
+
+
+def percentile(sorted_vals, p: float) -> float:
+    """Nearest-rank percentile over an ascending-sorted sequence."""
+    if not sorted_vals:
+        return 0.0
+    k = min(len(sorted_vals) - 1,
+            int(round(p / 100 * (len(sorted_vals) - 1))))
+    return sorted_vals[k]
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Thresholds a scenario is judged against (None = not enforced)."""
+
+    p95_s: float | None = None          # latency-from-arrival ceiling
+    goodput_min: float | None = None    # fraction finishing within deadline
+    throughput_min: float | None = None  # finished requests / second
+
+
+@dataclasses.dataclass(frozen=True)
+class _Event:
+    arrival: float
+    finished: float
+    latency: float | None      # None for expired requests
+    met_deadline: bool
+    expired: bool
+
+
+class MetricsCollector:
+    def __init__(self, window_s: float = 1.0):
+        assert window_s > 0
+        self.window_s = window_s
+        self.events: list[_Event] = []
+        self.ticks: list[tuple] = []   # (now, pending, inflight, hits, misses)
+
+    # -- engine hooks --------------------------------------------------------
+
+    def attach(self, engine) -> "MetricsCollector":
+        engine.on_complete.append(self.on_complete)
+        engine.on_expire.append(self.on_expire)
+        engine.on_tick_end.append(self.on_tick_end)
+        return self
+
+    def on_complete(self, rs) -> None:
+        dl = rs.req.deadline
+        self.events.append(_Event(
+            arrival=max(rs.submitted_at, rs.req.arrival),
+            finished=rs.finished_at, latency=rs.latency,
+            met_deadline=(dl is None or rs.finished_at <= dl),
+            expired=False))
+
+    def on_expire(self, rs) -> None:
+        self.events.append(_Event(
+            arrival=max(rs.submitted_at, rs.req.arrival),
+            finished=rs.finished_at, latency=None,
+            met_deadline=False, expired=True))
+
+    def on_tick_end(self, engine) -> None:
+        now = engine.now()
+        # queue depth = *arrived* but not yet admitted; an open-loop trace
+        # submits its whole future up front and that is not a backlog.
+        # pending stays sorted by arrival, so the due prefix bisects.
+        queued = bisect.bisect_right(engine.batcher.pending, now,
+                                     key=lambda rs: rs.req.arrival)
+        self.ticks.append((now, queued, len(engine.batcher.inflight),
+                           engine.bank.hits, engine.bank.misses))
+
+    # -- derived views -------------------------------------------------------
+
+    def windows(self, window_s: float | None = None) -> list[dict]:
+        """Sliding-window rows over [0, end) at ``window_s`` granularity."""
+        w = window_s or self.window_s
+        if not self.events and not self.ticks:
+            return []
+        end = max([e.finished for e in self.events]
+                  + [t[0] for t in self.ticks])
+        rows = []
+        # half-open windows [i*w, (i+1)*w); +1 so an event landing exactly
+        # on the last boundary still has a window
+        n_win = int(end // w) + 1 if end > 0 else 1
+        ev_by_win = collections.defaultdict(list)
+        for e in self.events:
+            ev_by_win[int(e.finished // w)].append(e)
+        ticks_by_win = collections.defaultdict(list)
+        for t in self.ticks:
+            ticks_by_win[int(t[0] // w)].append(t)
+        prev_h = prev_m = 0   # cumulative counters at previous window's end
+        for i in range(n_win):
+            lo = i * w
+            evs = ev_by_win.get(i, [])
+            lats = sorted(e.latency for e in evs if e.latency is not None)
+            ticks = ticks_by_win.get(i, [])
+            done = [e for e in evs if not e.expired]
+            row = {"t": lo,
+                   "throughput_rps": len(done) / w,
+                   "p50_s": percentile(lats, 50),
+                   "p95_s": percentile(lats, 95),
+                   "p99_s": percentile(lats, 99),
+                   "goodput_rps": sum(e.met_deadline for e in evs) / w,
+                   "expired": sum(e.expired for e in evs),
+                   "queue_depth": (sum(t[1] for t in ticks) / len(ticks)
+                                   if ticks else 0.0),
+                   "inflight": (sum(t[2] for t in ticks) / len(ticks)
+                                if ticks else 0.0)}
+            if ticks:
+                h = ticks[-1][3] - prev_h
+                m = ticks[-1][4] - prev_m
+                row["cache_hit_rate"] = h / (h + m) if (h + m) else None
+                prev_h, prev_m = ticks[-1][3], ticks[-1][4]
+            rows.append(row)
+        return rows
+
+    def summary(self) -> dict:
+        done = [e for e in self.events if not e.expired]
+        lats = sorted(e.latency for e in done if e.latency is not None)
+        n_met = sum(e.met_deadline for e in self.events)
+        duration = 0.0
+        if self.events:
+            duration = (max(e.finished for e in self.events)
+                        - min(e.arrival for e in self.events))
+        duration = max(duration, 1e-9)
+        return {
+            "requests": len(done),
+            "expired": sum(e.expired for e in self.events),
+            "deadline_misses": sum(not e.met_deadline for e in self.events),
+            "duration_s": duration,
+            "throughput_rps": len(done) / duration,
+            "goodput_rps": n_met / duration,
+            "goodput_frac": (n_met / len(self.events)
+                             if self.events else 1.0),
+            "p50_s": percentile(lats, 50),
+            "p95_s": percentile(lats, 95),
+            "p99_s": percentile(lats, 99),
+            "peak_queue_depth": max((t[1] for t in self.ticks), default=0),
+            "mean_inflight": (sum(t[2] for t in self.ticks) / len(self.ticks)
+                              if self.ticks else 0.0),
+        }
+
+    def evaluate(self, slo: SLO) -> dict:
+        """{'passed': bool, 'checks': {name: {...}}} for the set thresholds."""
+        s = self.summary()
+        checks = {}
+        if slo.p95_s is not None:
+            checks["p95_s"] = {"limit": slo.p95_s, "actual": s["p95_s"],
+                               "ok": s["p95_s"] <= slo.p95_s}
+        if slo.goodput_min is not None:
+            checks["goodput_frac"] = {"limit": slo.goodput_min,
+                                      "actual": s["goodput_frac"],
+                                      "ok": s["goodput_frac"]
+                                      >= slo.goodput_min}
+        if slo.throughput_min is not None:
+            checks["throughput_rps"] = {"limit": slo.throughput_min,
+                                        "actual": s["throughput_rps"],
+                                        "ok": s["throughput_rps"]
+                                        >= slo.throughput_min}
+        return {"passed": all(c["ok"] for c in checks.values()),
+                "checks": checks}

@@ -202,6 +202,9 @@ class WeightBank:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.prefetches = 0
+        self.prefetch_hits = 0
+        self._prefetched: set[int] = set()
         self.pack_stats: dict | None = None
 
     # -- segment lookup ----------------------------------------------------
@@ -229,15 +232,37 @@ class WeightBank:
     def params_for_segment(self, seg: int) -> dict:
         if seg in self._cache:
             self.hits += 1
+            if seg in self._prefetched:
+                self.prefetch_hits += 1
+                self._prefetched.discard(seg)
             self._cache.move_to_end(seg)
             return self._cache[seg]
         self.misses += 1
         params = self._build(self.segments[seg])
         self._cache[seg] = params
-        while len(self._cache) > self.max_cached:
-            self._cache.popitem(last=False)
-            self.evictions += 1
+        self._trim()
         return params
+
+    def prefetch(self, seg: int) -> bool:
+        """Eagerly build + cache a segment before any request asks for it
+        (the engine calls this when in-flight samplers are about to cross
+        into segment ``seg``). Not counted as a miss; the later
+        ``params_for_segment`` hit on it counts as a ``prefetch_hit``.
+        Synchronous today — the hook point where a multi-host build would
+        overlap packing with the current segment's forwards."""
+        if seg in self._cache:
+            return False
+        self._cache[seg] = self._build(self.segments[seg])
+        self.prefetches += 1
+        self._prefetched.add(seg)
+        self._trim()
+        return True
+
+    def _trim(self) -> None:
+        while len(self._cache) > self.max_cached:
+            evicted, _ = self._cache.popitem(last=False)
+            self._prefetched.discard(evicted)
+            self.evictions += 1
 
     def _build(self, seg: Segment) -> dict:
         params = self.q_params
@@ -257,7 +282,8 @@ class WeightBank:
         d = {"segments": self.n_segments, "cached": len(self._cache),
              "max_cached": self.max_cached, "hits": self.hits,
              "misses": self.misses, "evictions": self.evictions,
-             "hit_rate": self.hit_rate}
+             "hit_rate": self.hit_rate, "prefetches": self.prefetches,
+             "prefetch_hits": self.prefetch_hits}
         if self.pack_stats is not None:
             d["packed_sites"] = len(self.pack_stats["packed"])
             d["fallback_sites"] = len(self.pack_stats["fallback"])

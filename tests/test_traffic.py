@@ -1,0 +1,432 @@
+"""Traffic subsystem: trace format, generators, SLO metrics, scenarios,
+and the engine's deadline/priority/prefetch/callback extensions.
+
+Engine-level tests drive a stub ``apply_fn`` (the packed-path numerics
+are covered by test_serving); what matters here is scheduling behavior,
+determinism, and the metrics contract.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.tree import flatten_paths
+from repro.configs.diffusion_presets import tiny_ddim
+from repro.core import talora
+from repro.diffusion.schedule import make_schedule
+from repro.serving import (DiffusionServingEngine, VirtualClock, WeightBank,
+                           default_serving_plan)
+from repro.serving.traffic import (OPEN_LOOP, SLO, ClosedLoopGenerator,
+                                   MetricsCollector, RequestMix, TraceRequest,
+                                   TraceWriter, build_trace, get_scenario,
+                                   list_scenarios, load_trace,
+                                   open_loop_trace, run_scenario, save_trace,
+                                   submit_trace, validate_trace)
+from repro.serving.traffic.metrics import percentile
+from repro.serving.traffic.scenarios import resolve_trace_path
+
+KEY = jax.random.PRNGKey(0)
+T = 40
+GOLDEN = "tests/data/golden_trace.jsonl"
+
+
+def _single_segment_bank():
+    params = {"l0": {"w": jnp.ones((4, 4))}}
+    plan = default_serving_plan(flatten_paths(params))
+    return WeightBank(params, plan, {}, None, None, T)
+
+
+def _stub_engine(max_batch=3, **kw):
+    sched = make_schedule("linear", T)
+    return DiffusionServingEngine(
+        tiny_ddim(4), sched, _single_segment_bank(), max_batch=max_batch,
+        apply_fn=lambda params, x, tb, y, ctx: 0.1 * x, **kw)
+
+
+def _multi_segment_bank(max_cached=8):
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {"l0": {"w": jax.random.normal(k1, (8, 8))},
+              "l1": {"w": jax.random.normal(k2, (8, 6))}}
+    weights = dict(flatten_paths(params))
+    plan = default_serving_plan(weights)
+    tcfg = talora.TALoRAConfig(hub_size=2, rank=2, t_emb_dim=16,
+                               router_hidden=8)
+    hubs = talora.init_lora_hub(k3, talora.lora_target_dims_from_weights(
+        weights), tcfg)
+    for name in hubs:
+        hubs[name]["B"] = jax.random.normal(k4, hubs[name]["B"].shape) * 0.1
+    router = talora.init_router(k4, len(weights), tcfg)
+    return WeightBank(params, plan, hubs, router, tcfg, T,
+                      max_cached=max_cached)
+
+
+# ---------------------------------------------------------------------------
+# Trace format: round-trip, validation, capture.
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrip(tmp_path):
+    mix = RequestMix(samplers=("ddim", "plms"), steps=3, steps_jitter=1,
+                     deadline_s=(5.0, None), priorities=(1, 0), seed0=50)
+    reqs = open_loop_trace("poisson", 7, seed=9, mix=mix, rate=30.0)
+    path = str(tmp_path / "t.jsonl")
+    save_trace(path, reqs, meta={"note": "roundtrip"})
+    loaded, header = load_trace(path)
+    assert loaded == reqs
+    assert header["meta"] == {"note": "roundtrip"}
+    assert header["version"] == 1
+    # rids assigned by arrival order, arrivals ascending
+    assert [tr.rid for tr in loaded] == list(range(7))
+    arr = [tr.arrival for tr in loaded]
+    assert arr == sorted(arr)
+
+
+def test_trace_validation_rejects_malformed(tmp_path):
+    ok = TraceRequest(arrival=0.5, steps=2)
+    with pytest.raises(ValueError, match="sampler"):
+        validate_trace([dataclasses.replace(ok, sampler="euler")])
+    with pytest.raises(ValueError, match="steps"):
+        validate_trace([dataclasses.replace(ok, steps=0)])
+    with pytest.raises(ValueError, match="deadline"):
+        validate_trace([dataclasses.replace(ok, deadline=0.5)])
+    with pytest.raises(ValueError, match="class"):
+        validate_trace([dataclasses.replace(ok, guidance_scale=2.0)])
+    with pytest.raises(ValueError, match="arrival"):
+        validate_trace([dataclasses.replace(ok, arrival=-1.0)])
+    # header checks: wrong version / wrong format / unknown field
+    p = tmp_path / "bad.jsonl"
+    p.write_text(json.dumps({"format": "repro.traffic.trace",
+                             "version": 99}) + "\n")
+    with pytest.raises(ValueError, match="version"):
+        load_trace(str(p))
+    p.write_text(json.dumps({"format": "something-else", "version": 1})
+                 + "\n")
+    with pytest.raises(ValueError, match="not a"):
+        load_trace(str(p))
+    p.write_text(json.dumps({"format": "repro.traffic.trace", "version": 1})
+                 + "\n" + json.dumps({"arrival": 0.1, "bogus": 1}) + "\n")
+    with pytest.raises(ValueError, match="bogus"):
+        load_trace(str(p))
+
+
+def test_trace_load_fills_rids_without_colliding(tmp_path):
+    p = tmp_path / "mixed.jsonl"
+    p.write_text(json.dumps({"format": "repro.traffic.trace", "version": 1})
+                 + "\n" + json.dumps({"arrival": 0.0, "steps": 1}) + "\n"
+                 + json.dumps({"arrival": 1.0, "steps": 1, "rid": 0}) + "\n")
+    loaded, _ = load_trace(str(p))
+    rids = [tr.rid for tr in loaded]
+    assert len(set(rids)) == 2   # filled rid skips the explicit 0
+    with pytest.raises(ValueError, match="duplicate rids"):
+        validate_trace([TraceRequest(arrival=0.0, rid=1),
+                        TraceRequest(arrival=1.0, rid=1)])
+
+
+def test_trace_writer_captures_submissions(tmp_path):
+    path = str(tmp_path / "cap.jsonl")
+    eng = _stub_engine(clock=VirtualClock())
+    writer = TraceWriter(path, meta={"src": "test"}).attach(eng)
+    reqs = open_loop_trace("poisson", 4, seed=3,
+                           mix=RequestMix(steps=1, priorities=(2, 0)))
+    submit_trace(eng, reqs)
+    eng.run()
+    writer.close()
+    captured, header = load_trace(path)
+    assert header["meta"] == {"src": "test"}
+    assert len(captured) == 4
+    assert [c.arrival for c in captured] == [r.arrival for r in reqs]
+    assert [c.priority for c in captured] == [r.priority for r in reqs]
+    assert [c.steps for c in captured] == [r.steps for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Generators: seed determinism, schema invariants.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(OPEN_LOOP))
+def test_open_loop_generator_seed_determinism(kind):
+    a = open_loop_trace(kind, 16, seed=5)
+    b = open_loop_trace(kind, 16, seed=5)
+    c = open_loop_trace(kind, 16, seed=6)
+    assert a == b
+    assert a != c
+    arr = [tr.arrival for tr in a]
+    assert len(arr) == 16 and arr == sorted(arr)
+    assert all(np.isfinite(t) and t >= 0 for t in arr)
+
+
+def test_mix_cycles_are_index_deterministic():
+    mix = RequestMix(samplers=("ddim", "plms", "dpm_solver2"), steps=2,
+                     steps_jitter=2, deadline_s=(1.0, None),
+                     priorities=(3, 1), seed0=7)
+    reqs = open_loop_trace("poisson", 6, seed=0, mix=mix)
+    assert [r.sampler for r in reqs] == ["ddim", "plms", "dpm_solver2"] * 2
+    assert [r.steps for r in reqs] == [2, 3, 4] * 2
+    assert [r.priority for r in reqs] == [3, 1] * 3
+    assert [r.seed for r in reqs] == [7 + i for i in range(6)]
+    for i, r in enumerate(reqs):
+        if i % 2 == 0:
+            assert r.deadline == pytest.approx(r.arrival + 1.0)
+        else:
+            assert r.deadline is None
+
+
+def test_closed_loop_reissues_on_completion_and_is_deterministic(tmp_path):
+    def once(capture=None):
+        eng = _stub_engine(clock=VirtualClock())
+        writer = TraceWriter(capture).attach(eng) if capture else None
+        gen = ClosedLoopGenerator(n_users=2, requests_per_user=3,
+                                  think_mean_s=0.5,
+                                  mix=RequestMix(steps=1, steps_jitter=1),
+                                  seed=7)
+        issued = gen.drive(eng)
+        if writer is not None:
+            writer.close()
+        outs = {rid: (rs.n_evals, np.asarray(rs.x0).tobytes())
+                for rid, rs in eng.results.items()}
+        return issued, outs
+
+    cap = str(tmp_path / "closed.jsonl")
+    i1, o1 = once(capture=cap)
+    i2, o2 = once()
+    assert i1 == i2 and o1 == o2
+    assert len(i1) == 6 and len(o1) == 6
+    # two initial requests (no parent), four re-issued on completion with
+    # think-time links pointing at a finished request of the same user
+    roots = [tr for tr in i1 if tr.parent is None]
+    links = [tr for tr in i1 if tr.parent is not None]
+    assert len(roots) == 2 and len(links) == 4
+    by_rid = {tr.rid: tr for tr in i1}
+    for tr in links:
+        assert tr.think_s > 0
+        assert by_rid[tr.parent].user == tr.user
+        assert tr.arrival > by_rid[tr.parent].arrival
+    # the captured trace keeps the think-time links (user/parent/think_s)
+    captured, _ = load_trace(cap)
+    assert sorted(captured, key=lambda t: t.rid) == sorted(
+        i1, key=lambda t: t.rid)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler edge cases: deadline expiry, priority, empty groups.
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expired_admission_refused():
+    clock = [0.0]
+    eng = _stub_engine(now_fn=lambda: clock[0])
+    expired_cb = []
+    eng.on_expire.append(lambda rs: expired_cb.append(rs.req.rid))
+    eng.submit(steps=1, arrival=0.0, deadline=1.0)
+    eng.submit(steps=1, arrival=0.0)
+    clock[0] = 2.0   # past rid 0's deadline before any admission
+    res = eng.run()
+    assert res[0].expired and res[0].n_evals == 0 and res[0].x0 is None
+    assert not res[1].expired and res[1].n_evals == 1
+    assert expired_cb == [0]
+    s = eng.stats()
+    assert s["expired"] == 1 and s["requests"] == 1
+
+
+def test_all_pending_expired_tick_is_safe():
+    """An admission wave that expires every due request must not reach
+    group selection with an empty in-flight set."""
+    clock = [10.0]
+    eng = _stub_engine(now_fn=lambda: clock[0])
+    ticks = []
+    eng.on_tick_end.append(lambda e: ticks.append(e.tick_count))
+    for i in range(3):
+        eng.submit(steps=1, arrival=0.0, deadline=1.0 + i)
+    res = eng.run()
+    assert len(res) == 3 and all(rs.expired for rs in res.values())
+    assert eng.n_expired == 3 and eng.n_finished == 0
+    assert ticks, "on_tick_end must fire even on empty ticks"
+
+
+def test_priority_admission_beats_fifo_under_contention():
+    clock = [0.0]
+    eng = _stub_engine(max_batch=1, now_fn=lambda: clock[0])
+    eng.submit(steps=1, arrival=0.0, priority=0)
+    eng.submit(steps=1, arrival=0.0, priority=5)
+    res = eng.run()
+    assert list(res) == [1, 0]   # high priority retires first
+    assert res[1].admitted_at <= res[0].admitted_at
+    # equal priority falls back to (arrival, rid) FIFO
+    eng2 = _stub_engine(max_batch=1)
+    for _ in range(3):
+        eng2.submit(steps=1)
+    assert list(eng2.run()) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Metrics: percentile helper, collector windows/summary/SLO.
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 95) == 0.0
+    vals = sorted(float(v) for v in range(1, 101))
+    assert percentile(vals, 0) == 1.0
+    assert percentile(vals, 50) == 51.0   # nearest rank over 0..99 indices
+    assert percentile(vals, 99) == 99.0
+    assert percentile(vals, 100) == 100.0
+
+
+def test_metrics_collector_summary_windows_and_slo():
+    clock = [0.5]
+    eng = _stub_engine(max_batch=2, now_fn=lambda: clock[0])
+    col = MetricsCollector(window_s=1.0).attach(eng)
+    eng.submit(steps=2, arrival=0.0, deadline=5.0)
+    eng.submit(steps=2, arrival=0.0, deadline=1.0)
+    eng.submit(steps=2, arrival=1.5, deadline=1.8)
+    eng.tick()     # admits 0+1 at t=0.5, before rid 1's deadline
+    clock[0] = 2.0  # ... which passes mid-flight (miss, not expiry); rid 2
+    res = eng.run()  # is due + past deadline at its admission -> expired
+    assert res[2].expired
+    s = col.summary()
+    assert s["requests"] == 2 and s["expired"] == 1
+    # rid 0 met its 5.0 deadline; rid 1 finished at 2.0 > 1.0; rid 2 expired
+    assert s["deadline_misses"] == 2
+    assert s["goodput_frac"] == pytest.approx(1 / 3)
+    # finished at 2.0, anchored at max(submitted_at=0.5, arrival=0.0)
+    assert s["p95_s"] == pytest.approx(1.5)
+    rows = col.windows()
+    assert len(rows) >= 2
+    assert rows[-1]["expired"] == 1 or rows[-2]["expired"] == 1
+    assert sum(r["throughput_rps"] for r in rows) == pytest.approx(2.0)
+    # SLO verdicts cut both ways
+    assert col.evaluate(SLO(p95_s=3.0, goodput_min=0.2))["passed"]
+    bad = col.evaluate(SLO(p95_s=1.0, goodput_min=0.9))
+    assert not bad["passed"]
+    assert not bad["checks"]["p95_s"]["ok"]
+    assert not bad["checks"]["goodput_frac"]["ok"]
+
+
+def test_metrics_tick_series_records_queue_depth():
+    eng = _stub_engine(max_batch=1, clock=VirtualClock())
+    col = MetricsCollector().attach(eng)
+    for i in range(3):
+        eng.submit(steps=2, arrival=0.0)   # 2 steps: in-flight across ticks
+    eng.run()
+    assert col.ticks
+    assert col.summary()["peak_queue_depth"] >= 1
+    assert col.summary()["mean_inflight"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Weight-bank prefetch.
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_builds_next_segment_and_counts_hits():
+    sched = make_schedule("linear", T)
+
+    def run(prefetch):
+        bank = _multi_segment_bank()
+        eng = DiffusionServingEngine(
+            tiny_ddim(4), sched, bank, max_batch=2,
+            apply_fn=lambda p, x, tb, y, ctx: 0.1 * x, prefetch=prefetch)
+        eng.submit(steps=8, seed=0)
+        eng.submit(steps=8, seed=1)
+        res = eng.run()
+        return bank, {r: np.asarray(rs.x0).tobytes()
+                      for r, rs in res.items()}
+
+    bank_p, out_p = run(True)
+    bank_n, out_n = run(False)
+    assert bank_p.n_segments >= 2, "toy router should fragment the schedule"
+    assert bank_p.prefetches >= 1 and bank_p.prefetch_hits >= 1
+    assert bank_p.misses < bank_n.misses   # crossings found warm
+    assert bank_n.prefetches == 0 and bank_n.prefetch_hits == 0
+    assert out_p == out_n                  # prefetch never changes outputs
+    d = bank_p.describe()
+    assert d["prefetch_hits"] == bank_p.prefetch_hits
+
+
+def test_prefetch_respects_lru_cap():
+    bank = _multi_segment_bank(max_cached=1)
+    assert bank.n_segments >= 2
+    bank.prefetch(0)
+    bank.prefetch(1)   # evicts prefetched 0
+    assert bank.evictions == 1
+    bank.params_for_segment(1)
+    assert bank.prefetch_hits == 1
+    bank.params_for_segment(0)             # rebuilt: plain miss, not a hit
+    assert (bank.hits, bank.misses) == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Scenarios + golden trace replay.
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_registry_contents():
+    names = list_scenarios()
+    for required in ("steady", "burst", "diurnal", "closed_loop",
+                     "deadline_mix", "golden"):
+        assert required in names
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+    # open-loop scenario traces are deterministic in seed
+    scn = get_scenario("steady")
+    assert build_trace(scn, seed=1) == build_trace(scn, seed=1)
+    assert build_trace(scn, seed=1) != build_trace(scn, seed=2)
+    # deadline_mix carries tiered deadlines and priorities
+    reqs = build_trace(get_scenario("deadline_mix"), seed=0)
+    assert any(r.deadline is not None for r in reqs)
+    assert any(r.deadline is None for r in reqs)
+    assert len({r.priority for r in reqs}) > 1
+    with pytest.raises(ValueError, match="closed"):
+        build_trace(get_scenario("closed_loop"))
+
+
+def test_run_scenario_summary_contract():
+    scn = get_scenario("deadline_mix")
+    scn = dataclasses.replace(
+        scn, n_requests=5,
+        mix=dataclasses.replace(scn.mix, steps=1, steps_jitter=0))
+    eng = _stub_engine(max_batch=2, clock=VirtualClock())
+    summary = run_scenario(scn, eng, seed=0)
+    assert summary["scenario"] == "deadline_mix"
+    assert summary["requests"] + summary["expired"] == 5
+    assert "slo" in summary and "checks" in summary["slo"]
+    assert "goodput_frac" in summary["slo"]["checks"]
+
+
+def test_golden_trace_is_valid_and_replays_deterministically():
+    reqs, header = load_trace(resolve_trace_path(GOLDEN))
+    assert header["version"] == 1
+    assert len(reqs) >= 4
+    assert {r.sampler for r in reqs} == {"ddim", "plms", "dpm_solver2"}
+    assert any(r.deadline is not None for r in reqs)
+
+    def replay():
+        eng = _stub_engine(max_batch=2, clock=VirtualClock())
+        submit_trace(eng, reqs)
+        res = eng.run()
+        return {rid: (rs.n_evals, np.asarray(rs.x0).tobytes())
+                for rid, rs in res.items()}
+
+    r1, r2 = replay(), replay()
+    assert r1 == r2
+    assert sorted(r1) == [tr.rid for tr in reqs]
+    # per-request step counts follow the trace (dpm_solver2 runs 2 evals
+    # per step pair + final; ddim/plms one per step)
+    evals = {rid: n for rid, (n, _) in r1.items()}
+    for tr in reqs:
+        if tr.sampler == "ddim" or tr.sampler == "plms":
+            assert evals[tr.rid] == tr.steps
+        else:
+            assert evals[tr.rid] >= tr.steps
+
+
+def test_golden_scenario_binds_the_checked_in_trace():
+    scn = get_scenario("golden")
+    reqs = build_trace(scn)
+    direct, _ = load_trace(resolve_trace_path(GOLDEN))
+    assert reqs == direct
