@@ -26,7 +26,7 @@ from repro.nn.unet import io_sites, unet_init
 from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
 from repro.serving import (DiffusionServingEngine, WeightBank,
                            absmax_talora_setup)
-from repro.serving.traffic import get_scenario, run_scenario
+from repro.serving.traffic import SimClock, get_scenario, run_scenario
 
 IMG = 8
 T = 50
@@ -35,7 +35,7 @@ STEPS = 4
 
 # scenarios shrunk to bench scale: 4-6 requests, 2-3 sampler steps each
 BENCH_SCENARIOS = ("steady", "burst", "diurnal", "heavy_tail",
-                   "closed_loop", "deadline_mix")
+                   "closed_loop", "deadline_mix", "tight_deadlines")
 
 
 def _bench_scale(scn):
@@ -105,6 +105,49 @@ def rows(log=print) -> list[dict]:
     out.append({"name": "serving_engine_1req_tiny_ddim8_ref",
                 "us_per_call": wall1 * 1e6 / max(evals1, 1),
                 "derived": "per-eval baseline (batch=1)"})
+
+    # policy comparison: fifo (largest-group-wins) vs slo (slack-aware
+    # EDF + preemption) on the deadline scenarios, under the traffic
+    # subsystem's deterministic simulated service clock (`SimClock`:
+    # each forward costs base + per-padded-row, charged inside the tick
+    # so completions pay for their own forward) — the goodput gap is a
+    # property of the *policy*, not of this machine's wall-clock speed.
+    # (scenario, max_batch, tight-tier override): pressure points where
+    # selection — not admission — decides who meets the deadline
+    for name, comp_mb, comp_dl in (("deadline_mix", 4, (0.6, 10.0, None)),
+                                   ("tight_deadlines", 8, None)):
+        mix = dataclasses.replace(get_scenario(name).mix,
+                                  steps=5, steps_jitter=1)
+        if comp_dl is not None:
+            mix = dataclasses.replace(mix, deadline_s=comp_dl)
+        scn = dataclasses.replace(get_scenario(name), n_requests=12,
+                                  max_batch=comp_mb, mix=mix)
+        goodput = {}
+        for policy in ("fifo", "slo"):
+            clock = SimClock()
+            bank_p = WeightBank(params, plan, hubs, router, tcfg, T,
+                                max_cached=bank.n_segments)
+            eng = DiffusionServingEngine(
+                cfg, sched, bank_p, act_qps={"*": act_qp},
+                max_batch=scn.max_batch, policy=policy,
+                now_fn=clock.now, max_idle_sleep=0.0)
+            clock.attach(eng)
+            summary = run_scenario(scn, eng, seed=0)
+            goodput[policy] = summary["goodput_frac"]
+            s = eng.stats()
+            out.append({
+                "name": f"traffic_{name}_{policy}",
+                "us_per_call": summary["wall_s"] * 1e6
+                / max(sum(rs.n_evals for rs in eng.results.values()), 1),
+                "goodput_frac": summary["goodput_frac"],
+                "derived": f"goodput {summary['goodput_frac']:.2f} "
+                           f"({summary['deadline_misses']} misses, "
+                           f"{summary['expired']} expired); "
+                           f"{s['preemptions']} preemptions, "
+                           f"{s['deadline_saves']} saves; sim-clock "
+                           f"{clock.tick_base_s}+{clock.sample_s}/row"})
+        log(f"  # policy gap [{name}]: slo goodput {goodput['slo']:.2f} "
+            f"vs fifo {goodput['fifo']:.2f}")
 
     # traffic scenarios: one row per registry entry (arrival shape x SLO)
     for name in BENCH_SCENARIOS:

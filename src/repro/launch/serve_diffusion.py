@@ -7,7 +7,8 @@ one of:
   * ``--trace file.jsonl``  — replay a recorded/generated trace file,
   * ``--scenario name``     — a named workload from the traffic registry
     (``steady`` | ``burst`` | ``diurnal`` | ``heavy_tail`` |
-    ``closed_loop`` | ``deadline_mix`` | ``golden``; default steady),
+    ``closed_loop`` | ``deadline_mix`` | ``tight_deadlines`` |
+    ``golden``; default steady),
 
 and reports sliding-window + whole-run SLO metrics (throughput, latency
 percentiles from arrival, goodput vs per-request deadlines, queue depth,
@@ -18,8 +19,12 @@ must print the same digest.
     PYTHONPATH=src python -m repro.launch.serve_diffusion --smoke \
         --scenario golden --kernels interpret --replay-clock virtual
 
-``--save-trace out.jsonl`` captures whatever workload actually ran
-(including closed-loop realized arrivals) back into a replayable trace.
+``--policy slo`` swaps the largest-group-wins scheduler for the
+slack-aware one (EDF pressure vs segment-switch cost, preemptive group
+splits — see ``serving/scheduler.py``); both policies stay benchable
+against the same scenario. ``--save-trace out.jsonl`` captures whatever
+workload actually ran (including closed-loop realized arrivals) back
+into a replayable trace.
 ``--plan absmax`` (default) builds the calibration-free abs-max FP4 plan;
 ``--plan search`` runs the paper's calibrate + MSE-search pipeline first
 (slow — minutes on CPU).
@@ -145,6 +150,14 @@ def main(argv=None) -> None:
                     choices=["wall", "virtual"],
                     help="virtual: deterministic admission/batching "
                          "(replay checks); wall: real SLO timing")
+    ap.add_argument("--policy", default="fifo", choices=["fifo", "slo"],
+                    help="group selection: fifo = largest-group-wins "
+                         "baseline; slo = slack-aware EDF vs segment-"
+                         "switch cost with preemptive group splits")
+    ap.add_argument("--sync-prefetch", action="store_true",
+                    help="build prefetched segments inline instead of on "
+                         "the bank's background thread (virtual-clock "
+                         "replay is always synchronous)")
     ap.add_argument("--requests", type=int, default=None,
                     help="override the scenario's open-loop request count")
     ap.add_argument("--rate", type=float, default=None,
@@ -215,12 +228,14 @@ def main(argv=None) -> None:
     clock = VirtualClock() if args.replay_clock == "virtual" else None
     engine = DiffusionServingEngine(cfg, sched, bank, act_qps=act_qps,
                                     max_batch=max_batch, clock=clock,
+                                    policy=args.policy,
                                     max_idle_sleep=args.max_idle_sleep,
-                                    prefetch=not args.no_prefetch)
+                                    prefetch=not args.no_prefetch,
+                                    async_prefetch=not args.sync_prefetch)
     print(f"bank ready: {bank.n_segments} routing segments, plan={args.plan}, "
           f"kernels={args.kernels} ({time.time() - t0:.1f}s)")
     print(f"workload: {scn.name} — {scn.desc} "
-          f"[clock={args.replay_clock}]")
+          f"[clock={args.replay_clock}, policy={args.policy}]")
 
     writer = None
     if args.save_trace:
@@ -252,6 +267,8 @@ def main(argv=None) -> None:
     print(f"batching: mean batch {s['mean_batch']:.2f} "
           f"({s['forwards']} forwards / {s['ticks']} ticks), "
           f"peak queue depth {summary['peak_queue_depth']}")
+    print(f"scheduler: policy={s['policy']}, {s['preemptions']} preemptions, "
+          f"{s['deadline_saves']} deadline saves")
     for row in collector.windows()[:8]:
         hr = row.get("cache_hit_rate")
         print(f"  window t={row['t']:5.1f}s: {row['throughput_rps']:6.2f} "
@@ -268,7 +285,9 @@ def main(argv=None) -> None:
           f"({s['bank_hits']} hits / {s['bank_misses']} misses, "
           f"{s['bank_evictions']} evictions, cap {args.bank_cap}), "
           f"{s['prefetch_hits']} prefetch hits / {s['bank_prefetches']} "
-          f"prefetches, {s['bank_packed_sites']} packed / "
+          f"prefetches, {s['bank_builds']} builds "
+          f"({s['bank_build_joins']} joined in-progress), "
+          f"{s['bank_packed_sites']} packed / "
           f"{s['bank_fallback_sites']} bf16-fallback sites")
     print(f"jit cache: {s['compiled_forwards']} compiled forwards "
           f"(buckets {s['buckets']}), {s['padded_samples']} padded samples, "

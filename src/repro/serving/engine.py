@@ -28,7 +28,17 @@ The engine exposes callback hooks for the traffic subsystem
 (queue-depth / cache time series). After each tick it prefetches the
 weight-bank segments that in-flight samplers will need next, so a
 segment boundary crossing finds its merged+packed weights already built
-(``stats()['prefetch_hits']``).
+(``stats()['prefetch_hits']``). Under a wall clock the prefetch is
+*asynchronous* — the bank's background thread merges/packs the next
+segment while the current segment's forwards run; under a
+``VirtualClock`` it stays synchronous so replay digests are
+deterministic.
+
+``policy="slo"`` switches group selection from largest-group-wins to the
+slack-aware scheduler (EDF pressure weighted against segment-switch
+cost, with group-splitting preemption — see ``scheduler``); the engine
+feeds the scheduler's ``CostModel`` with observed forward and
+segment-build durations measured on the engine clock.
 """
 from __future__ import annotations
 
@@ -44,7 +54,7 @@ from repro.diffusion.schedule import NoiseSchedule
 from repro.nn.unet import UNetConfig, unet_apply
 from repro.quant.calibrate import QuantContext
 from repro.serving.scheduler import (ContinuousBatcher, GenRequest,
-                                     RequestState)
+                                     RequestState, bucket_of)
 from repro.serving.traffic.metrics import percentile
 from repro.serving.weight_bank import WeightBank
 
@@ -78,10 +88,12 @@ class DiffusionServingEngine:
                  act_qps: dict | None = None,
                  apply_fn: Callable | None = None,
                  max_batch: int = 8, starvation_ticks: int = 4,
+                 policy: str = "fifo",
                  now_fn: Callable[[], float] | None = None,
                  clock: VirtualClock | None = None,
                  max_idle_sleep: float = 0.25,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 async_prefetch: bool = True):
         self.cfg = cfg
         self.sched = sched
         self.bank = bank
@@ -89,7 +101,10 @@ class DiffusionServingEngine:
         self._apply = apply_fn or (
             lambda params, x, tb, y, ctx: unet_apply(params, x, tb, cfg,
                                                      y=y, ctx=ctx))
-        self.batcher = ContinuousBatcher(max_batch, starvation_ticks)
+        self.batcher = ContinuousBatcher(max_batch, starvation_ticks,
+                                         policy=policy)
+        self.batcher.segment_warm = bank.is_cached
+        self.batcher.segment_building = bank.is_building
         if clock is not None:
             self._now = clock.now
             self._advance = clock.advance_to
@@ -99,7 +114,12 @@ class DiffusionServingEngine:
             self._advance = None
         self.max_idle_sleep = max_idle_sleep
         self.prefetch_enabled = prefetch
+        # background builds only make sense when real time passes during
+        # compute; a VirtualClock replay must build synchronously so the
+        # golden-trace digest stays deterministic.
+        self.async_prefetch = async_prefetch and self._advance is None
         self._jit: dict[tuple, Callable] = {}
+        self._last_padded_rows = 0
         self._next_rid = 0
         self.tick_count = 0
         self.n_forwards = 0
@@ -116,6 +136,9 @@ class DiffusionServingEngine:
         self.on_complete: list[Callable] = []
         self.on_expire: list[Callable] = []
         self.on_tick_end: list[Callable] = []
+        # (engine, padded_rows) once per tick's batched forwards — the
+        # seam simulated service clocks charge compute through
+        self.on_forward: list[Callable] = []
 
     def now(self) -> float:
         return self._now()
@@ -161,8 +184,22 @@ class DiffusionServingEngine:
             return []
         groups = self.batcher.groups(
             lambda rs: self.bank.segment_of(sampler_needed_t(rs.state)))
-        seg, members = self.batcher.select(groups, self.tick_count)
+        seg, members = self.batcher.select(groups, self.tick_count, now=now)
+        self.batcher.current_seg = seg
+        t_fetch = self._now()
+        misses_before = self.bank.misses
+        joins_before = self.bank.build_joins
         params = self.bank.params_for_segment(seg)
+        if self.bank.misses > misses_before:
+            # cold fetch: the observed stall is the segment-switch cost
+            self.batcher.cost.observe_switch(self._now() - t_fetch)
+        elif self.bank.build_joins > joins_before:
+            # joined an async build mid-way: with prefetch on this is the
+            # common cold path (prefetch registers the build before the
+            # fetch, so `misses` never moves) — without it the switch
+            # EWMA would stay pinned to the first cold build forever.
+            # The stall is the remaining ~half of a build on average.
+            self.batcher.cost.observe_switch(2 * (self._now() - t_fetch))
 
         # build eval items: (rs, role, t, x (1,H,W,C), y)
         items = []
@@ -175,7 +212,15 @@ class DiffusionServingEngine:
             else:
                 items.append((rs, _PLAIN, t, x, rs.req.y))
 
+        t_compute = self._now()
+        n_jit_before = len(self._jit)
         eps_by_item = self._run_partitions(params, items)
+        if len(self._jit) == n_jit_before:
+            # skip ticks that traced+compiled a new (bucket, has_y)
+            # forward: seeding the EWMA with compile time would poison
+            # slack estimates for many subsequent ticks
+            self.batcher.cost.observe_eval(self._now() - t_compute,
+                                           self._last_padded_rows)
 
         finished = []
         tick = self.tick_count
@@ -203,9 +248,13 @@ class DiffusionServingEngine:
         if self.prefetch_enabled:
             # Requests that just advanced may cross into a new routing
             # segment next step — build/pack it before it is asked for.
+            # Async mode hands the build to the bank's background thread
+            # so the next segment merges/packs while this segment's
+            # forwards keep running; a later fetch joins the in-progress
+            # build instead of rebuilding.
             for s in {self.bank.segment_of(sampler_needed_t(rs.state))
                       for rs in members if not rs.state.done}:
-                self.bank.prefetch(s)
+                self.bank.prefetch(s, block=not self.async_prefetch)
         for cb in self.on_tick_end:
             cb(self)
         return finished
@@ -218,6 +267,7 @@ class DiffusionServingEngine:
         batches arbitrary timesteps (``t`` is per-sample).
         """
         eps_by_item: dict[int, dict] = {}
+        padded_rows = 0
         for has_y in (False, True):
             part = [it for it in items if (it[4] is not None) == has_y]
             if not part:
@@ -229,19 +279,19 @@ class DiffusionServingEngine:
             eps = self._forward(params, x, tb, y)
             self.n_forwards += 1
             self.n_samples_batched += len(part)
+            padded_rows += self._bucket(len(part))
             for j, (rs, role, *_rest) in enumerate(part):
                 eps_by_item.setdefault(id(rs), {})[role] = eps[j:j + 1]
+        self._last_padded_rows = padded_rows
+        for cb in self.on_forward:
+            cb(self, padded_rows)
         return eps_by_item
 
-    @staticmethod
-    def _bucket(n: int) -> int:
-        """Smallest power of two >= n — pads partition batches so churny
-        in-flight counts reuse a handful of compiled forwards instead of
-        one jit entry per distinct batch size."""
-        b = 1
-        while b < n:
-            b *= 2
-        return b
+    # Partition batches pad to power-of-two buckets so churny in-flight
+    # counts reuse a handful of compiled forwards instead of one jit entry
+    # per distinct batch size; the scheduler's cost model shares the same
+    # bucket function so slack estimates price the padding.
+    _bucket = staticmethod(bucket_of)
 
     def _forward(self, params, x, tb, y):
         n = x.shape[0]
@@ -307,6 +357,9 @@ class DiffusionServingEngine:
                 if wait > 0:
                     time.sleep(min(wait, max(cap, 0.0)))
                     self.n_idle_sleeps += 1
+        # settle outstanding background builds so post-run stats (builds
+        # vs misses+prefetches) reconcile deterministically
+        self.bank.drain()
         return self.results
 
     # -- metrics -----------------------------------------------------------
@@ -316,6 +369,9 @@ class DiffusionServingEngine:
         buckets = sorted({k[0] for k in self._jit})
         d = {"requests": self.n_finished, "ticks": self.tick_count,
              "expired": self.n_expired,
+             "policy": self.batcher.policy,
+             "preemptions": self.batcher.preemptions,
+             "deadline_saves": self.batcher.deadline_saves,
              "forwards": self.n_forwards,
              "mean_batch": (self.n_samples_batched / self.n_forwards
                             if self.n_forwards else 0.0),

@@ -17,3 +17,4 @@ from repro.serving.traffic.metrics import SLO, MetricsCollector, percentile
 from repro.serving.traffic.scenarios import (SCENARIOS, Scenario,
                                              build_trace, get_scenario,
                                              list_scenarios, run_scenario)
+from repro.serving.traffic.sim import SimClock

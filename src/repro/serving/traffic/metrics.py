@@ -28,7 +28,23 @@ def percentile(sorted_vals, p: float) -> float:
         return 0.0
     k = min(len(sorted_vals) - 1,
             int(round(p / 100 * (len(sorted_vals) - 1))))
-    return sorted_vals[k]
+    return sorted_vals[max(k, 0)]
+
+
+def _win_index(t: float, w: float) -> int:
+    """Half-open window index for time ``t`` at width ``w``.
+
+    Plain ``int(t // w)`` puts a value landing *exactly* on a boundary in
+    the window below it whenever ``t / w`` floats just under the integer
+    (``0.3 // 0.1 == 2.0``), breaking the documented ``[i*w, (i+1)*w)``
+    contract; snap quotients whose fractional part is within 1e-9 of 1
+    up to the next integer instead.
+    """
+    q = t / w
+    i = int(q)
+    if q - i > 1.0 - 1e-9:
+        i += 1
+    return i
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,13 +116,13 @@ class MetricsCollector:
         rows = []
         # half-open windows [i*w, (i+1)*w); +1 so an event landing exactly
         # on the last boundary still has a window
-        n_win = int(end // w) + 1 if end > 0 else 1
+        n_win = _win_index(end, w) + 1 if end > 0 else 1
         ev_by_win = collections.defaultdict(list)
         for e in self.events:
-            ev_by_win[int(e.finished // w)].append(e)
+            ev_by_win[_win_index(e.finished, w)].append(e)
         ticks_by_win = collections.defaultdict(list)
         for t in self.ticks:
-            ticks_by_win[int(t[0] // w)].append(t)
+            ticks_by_win[_win_index(t[0], w)].append(t)
         prev_h = prev_m = 0   # cumulative counters at previous window's end
         for i in range(n_win):
             lo = i * w

@@ -16,6 +16,10 @@ Registry (see ``SCENARIOS``):
   * ``closed_loop``  — N users with think time; rate adapts to service.
   * ``deadline_mix`` — tiered deadlines + priorities over Poisson; the
     goodput/expiry scenario (tight-budget requests expire under load).
+  * ``tight_deadlines`` — a minority of requests carry tight budgets at
+    uniform priority, so *admission* cannot save them — only deadline-
+    aware group selection can. The fifo-vs-slo policy discriminator
+    (largest-group-wins demonstrably misses the tight tier).
   * ``golden``       — replay of the checked-in CI fixture trace.
 """
 from __future__ import annotations
@@ -112,6 +116,16 @@ register(Scenario(
     mix=RequestMix(samplers=("ddim",), steps=10, steps_jitter=1,
                    deadline_s=(2.0, 30.0, None), priorities=(2, 1, 0)),
     slo=SLO(goodput_min=0.25)))
+
+register(Scenario(
+    name="tight_deadlines", kind="open", gen="poisson",
+    gen_kw=(("rate", 50.0),),
+    desc="Every 3rd request has a tight budget, all at equal priority; "
+         "only deadline-aware selection meets the tight tier.",
+    n_requests=12,
+    mix=RequestMix(samplers=("ddim",), steps=6, steps_jitter=1,
+                   deadline_s=(1.2, None, None), priorities=(0,)),
+    max_batch=6, slo=SLO(goodput_min=0.9)))
 
 register(Scenario(
     name="golden", kind="trace", trace_path=GOLDEN_TRACE,

@@ -1,0 +1,56 @@
+"""Deterministic simulated service clock for scheduler-policy studies.
+
+Wall-clock goodput comparisons are machine-dependent (a slow CI runner
+turns every deadline into a miss), so the bench's fifo-vs-slo rows and
+the scheduler test suites score policies under simulated time instead:
+each batched forward costs ``tick_base_s + sample_s * padded rows``
+(CFG partitions bucket separately, exactly like the engine pads them)
+and an idle tick costs ``tick_base_s``.
+
+The forward's cost is charged *inside* the tick — through the engine's
+``on_forward`` hook, which fires with the padded row count before
+completions are stamped — so a finishing request has already paid for
+its own forward; charging in ``on_tick_end`` instead would score every
+completion one full tick early (deadline verdicts systematically
+optimistic). The scheduler's ``CostModel`` is primed with the same
+rates, so slack estimates and preemptive splits are live from tick 0
+and consistent with what the clock actually charges. Attaching also
+forces *synchronous* prefetch builds: simulated time does not model
+build wall time, and a real background thread finishing earlier or
+later on a loaded machine would otherwise flip warm/mid-build switch
+penalties — and therefore selection — per machine.
+"""
+from __future__ import annotations
+
+
+class SimClock:
+    """now_fn-compatible clock advanced by the engine's own compute."""
+
+    def __init__(self, tick_base_s: float = 0.02, sample_s: float = 0.015):
+        self.tick_base_s = tick_base_s
+        self.sample_s = sample_s
+        self.t = 0.0
+        self._fwd_seen = 0
+
+    def now(self) -> float:
+        return self.t
+
+    def attach(self, engine) -> "SimClock":
+        """Wire the clock into an engine built with ``now_fn=clock.now``
+        (and ``max_idle_sleep=0.0`` so idle waits spin through ticks)."""
+        engine.async_prefetch = False    # thread timing must not leak in
+
+        def charge_forward(e, padded_rows):
+            self.t += self.tick_base_s + self.sample_s * padded_rows
+
+        engine.on_forward.append(charge_forward)
+
+        def idle_advance(e):
+            if e.n_forwards == self._fwd_seen:   # tick ran no forward
+                self.t += self.tick_base_s
+            self._fwd_seen = e.n_forwards
+
+        engine.on_tick_end.append(idle_advance)
+        engine.batcher.cost.sample_s = self.sample_s
+        engine.batcher.cost.switch_s = self.tick_base_s
+        return self

@@ -28,7 +28,9 @@ is what the engine's parity test measures.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any
 
 import jax
@@ -198,12 +200,29 @@ class WeightBank:
         for s in self.segments:
             self._t_to_seg[s.t_lo:s.t_hi + 1] = s.index
 
+        # One lock guards the cache, the in-progress build registry, and
+        # every counter: the async prefetch worker and the engine thread
+        # race on all of them. Builds themselves (merge + pack jax work)
+        # run outside the lock; a (seg -> Future) entry in ``_building``
+        # is the single-build guarantee — any concurrent fetch joins the
+        # future instead of building again.
+        self._lock = threading.Lock()
+        self._building: dict[int, Future] = {}
+        self._executor: ThreadPoolExecutor | None = None
         self._cache: OrderedDict[int, dict] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.prefetches = 0
         self.prefetch_hits = 0
+        # builds + build_failures == misses + prefetches once drained;
+        # build_joins = fetches that waited on an in-progress build.
+        # build_failures keeps a background prefetch whose merge+pack
+        # raised (the error only surfaces to whoever joins the future)
+        # from silently breaking that reconciliation.
+        self.builds = 0
+        self.build_joins = 0
+        self.build_failures = 0
         self._prefetched: set[int] = set()
         self.pack_stats: dict | None = None
 
@@ -226,39 +245,127 @@ class WeightBank:
 
     # -- weight materialization --------------------------------------------
 
+    def is_cached(self, seg: int) -> bool:
+        """Ready now — switching to ``seg`` pays no build stall at all."""
+        with self._lock:
+            return seg in self._cache
+
+    def is_building(self, seg: int) -> bool:
+        """Mid-build — a fetch would join the in-progress build and stall
+        for part of a merge+pack (the slo scheduler prices this at half
+        the cold-build estimate)."""
+        with self._lock:
+            return seg in self._building
+
     def params_for_t(self, t: int) -> dict:
         return self.params_for_segment(self.segment_of(t))
 
     def params_for_segment(self, seg: int) -> dict:
-        if seg in self._cache:
-            self.hits += 1
-            if seg in self._prefetched:
-                self.prefetch_hits += 1
-                self._prefetched.discard(seg)
-            self._cache.move_to_end(seg)
-            return self._cache[seg]
-        self.misses += 1
-        params = self._build(self.segments[seg])
-        self._cache[seg] = params
-        self._trim()
-        return params
+        build_fut = None
+        with self._lock:
+            if seg in self._cache:
+                self.hits += 1
+                if seg in self._prefetched:
+                    self.prefetch_hits += 1
+                    self._prefetched.discard(seg)
+                self._cache.move_to_end(seg)
+                return self._cache[seg]
+            fut = self._building.get(seg)
+            if fut is None:
+                self.misses += 1
+                build_fut = fut = Future()
+                self._building[seg] = fut
+            else:
+                # join the in-progress build instead of building twice;
+                # the stall is shorter than a cold build, so it scores as
+                # a hit (and a prefetch_hit when a prefetch started it)
+                self.hits += 1
+                self.build_joins += 1
+                if seg in self._prefetched:
+                    self.prefetch_hits += 1
+                    self._prefetched.discard(seg)
+        if build_fut is not None:
+            return self._build_install(seg, build_fut)
+        return fut.result()
 
-    def prefetch(self, seg: int) -> bool:
+    def prefetch(self, seg: int, *, block: bool = True) -> bool:
         """Eagerly build + cache a segment before any request asks for it
         (the engine calls this when in-flight samplers are about to cross
         into segment ``seg``). Not counted as a miss; the later
         ``params_for_segment`` hit on it counts as a ``prefetch_hit``.
-        Synchronous today — the hook point where a multi-host build would
-        overlap packing with the current segment's forwards."""
-        if seg in self._cache:
-            return False
-        self._cache[seg] = self._build(self.segments[seg])
-        self.prefetches += 1
-        self._prefetched.add(seg)
-        self._trim()
+
+        ``block=False`` hands the build to a single background worker
+        thread so the next segment merges/packs while the current
+        segment's forwards run; ``block=True`` builds inline (the
+        VirtualClock replay path — thread interleaving must not be able
+        to change admission/batching). Returns False without building
+        when the segment is already cached or already being built.
+        """
+        with self._lock:
+            if seg in self._cache or seg in self._building:
+                return False
+            fut = Future()
+            self._building[seg] = fut
+            self.prefetches += 1
+            self._prefetched.add(seg)
+            if not block:
+                # create + submit under the lock: a concurrent drain()
+                # swaps the executor out under the same lock, so a build
+                # can never be enqueued on a shut-down worker
+                if self._executor is None:
+                    self._executor = ThreadPoolExecutor(
+                        max_workers=1,
+                        thread_name_prefix="weight-bank-prefetch")
+                self._executor.submit(self._build_install, seg, fut)
+        if block:
+            self._build_install(seg, fut)
         return True
 
+    def drain(self) -> None:
+        """Wait for every in-progress build to install (stats like
+        ``builds == misses + prefetches`` only reconcile at rest), then
+        release the idle worker thread — the next non-blocking prefetch
+        lazily recreates it, so long-lived processes that churn through
+        banks don't accumulate parked executors."""
+        while True:
+            with self._lock:
+                futs = list(self._building.values())
+            if not futs:
+                break
+            for f in futs:
+                try:
+                    f.result()
+                except Exception:        # surfaced to the build's owner
+                    pass
+        with self._lock:
+            executor, self._executor = self._executor, None
+        if executor is not None:
+            executor.shutdown(wait=True)
+
+    def _build_install(self, seg: int, fut: Future) -> dict:
+        """Build outside the lock, install under it, resolve the future.
+        Only the thread that registered ``fut`` in ``_building`` runs
+        this, so each registered build executes exactly once."""
+        try:
+            params = self._build(self.segments[seg])
+        except BaseException as e:
+            with self._lock:
+                self._building.pop(seg, None)
+                self._prefetched.discard(seg)
+                self.build_failures += 1
+            fut.set_exception(e)
+            raise
+        with self._lock:
+            self._cache[seg] = params
+            self._cache.move_to_end(seg)
+            self._building.pop(seg, None)
+            self.builds += 1
+            self._trim()
+        fut.set_result(params)
+        return params
+
     def _trim(self) -> None:
+        # caller holds self._lock
         while len(self._cache) > self.max_cached:
             evicted, _ = self._cache.popitem(last=False)
             self._prefetched.discard(evicted)
@@ -283,7 +390,9 @@ class WeightBank:
              "max_cached": self.max_cached, "hits": self.hits,
              "misses": self.misses, "evictions": self.evictions,
              "hit_rate": self.hit_rate, "prefetches": self.prefetches,
-             "prefetch_hits": self.prefetch_hits}
+             "prefetch_hits": self.prefetch_hits, "builds": self.builds,
+             "build_joins": self.build_joins,
+             "build_failures": self.build_failures}
         if self.pack_stats is not None:
             d["packed_sites"] = len(self.pack_stats["packed"])
             d["fallback_sites"] = len(self.pack_stats["fallback"])

@@ -1,0 +1,206 @@
+"""Randomized scheduler-invariant suite (seeded; both selection policies).
+
+Each property drives the full engine (stub ``apply_fn`` — numerics are
+test_serving's job) over a random trace under a deterministic simulated
+clock and checks the contracts the serving layer is built on:
+
+  * liveness   — every admitted request eventually completes; every
+    submitted request ends up in ``results`` exactly once,
+  * starvation — no in-flight request goes more than
+    ``starvation_ticks + max_batch`` compute ticks without advancing
+    (the backstop promotes the oldest starved request's group, and a
+    preemptive split may never defer a member the backstop protects),
+  * admission  — each admission wave orders by (priority desc, arrival,
+    rid) and only due requests are admitted,
+  * expiry     — only already-due requests whose deadline has passed are
+    expired, and expired requests never ran.
+
+The randomized sweeps come from ``tests/_hypothesis_compat`` (real
+hypothesis when installed, a seeded deterministic fallback otherwise),
+so failures reproduce by seed.
+"""
+import jax
+import numpy as np
+
+from tests._hypothesis_compat import given, settings, strategies as st
+from tests._serving_fixtures import (SCHED, mk_inflight as _mk_inflight_fx,
+                                     multi_segment_bank as
+                                     _multi_segment_bank)
+
+from repro.configs.diffusion_presets import tiny_ddim
+from repro.diffusion.samplers import sampler_init
+from repro.serving import (ContinuousBatcher, DiffusionServingEngine,
+                           GenRequest, RequestState)
+
+POLICIES = ("fifo", "slo")
+
+
+def _random_engine(rng, policy):
+    """(engine, clock, trace_params) with a per-tick simulated clock."""
+    max_batch = int(rng.integers(1, 5))
+    starve = int(rng.integers(2, 5))
+    clock = [0.0]
+    eng = DiffusionServingEngine(
+        tiny_ddim(4), SCHED, _multi_segment_bank(),
+        max_batch=max_batch, starvation_ticks=starve, policy=policy,
+        apply_fn=lambda p, x, tb, y, ctx: 0.1 * x,
+        now_fn=lambda: clock[0], max_idle_sleep=0.0)
+    eng.on_tick_end.append(lambda e: clock.__setitem__(0, clock[0] + 0.05))
+    # prime the cost model so the slo slack / preemption paths are live
+    # (sim compute takes zero clock time, so nothing is observed)
+    eng.batcher.cost.sample_s = 0.01
+    eng.batcher.cost.switch_s = 0.02
+    return eng, clock
+
+
+def _random_trace(rng, eng, n):
+    for i in range(n):
+        arrival = float(rng.uniform(0.0, 0.6))
+        deadline = (None if rng.random() < 0.4
+                    else arrival + float(rng.uniform(0.05, 1.5)))
+        eng.submit(steps=int(rng.integers(1, 4)),
+                   seed=i,
+                   sampler=str(rng.choice(["ddim", "plms", "dpm_solver2"])),
+                   arrival=arrival, deadline=deadline,
+                   priority=int(rng.integers(0, 4)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(POLICIES))
+def test_engine_random_trace_invariants(seed, policy):
+    rng = np.random.default_rng(seed)
+    eng, clock = _random_engine(rng, policy)
+    n = int(rng.integers(2, 9))
+
+    starve = eng.batcher.starvation_ticks
+    max_batch = eng.batcher.max_batch
+    gap_violations = []
+
+    def watch_starvation(e):
+        for rs in e.batcher.inflight:
+            if rs.last_advance_tick < 0:
+                continue
+            gap = e.tick_count - rs.last_advance_tick
+            if gap > starve + max_batch:
+                gap_violations.append((rs.req.rid, gap, e.tick_count))
+
+    eng.on_tick_end.append(watch_starvation)
+
+    waves = []
+    orig_admit = eng.batcher.admit
+
+    def recording_admit(now, tick):
+        admitted, expired = orig_admit(now, tick)
+        waves.append((now, [(r.req.priority, r.req.arrival, r.req.rid)
+                            for r in admitted]))
+        return admitted, expired
+
+    eng.batcher.admit = recording_admit
+
+    _random_trace(rng, eng, n)
+    res = eng.run()
+
+    # liveness: every submitted request resolves exactly once
+    assert sorted(res) == list(range(n))
+    for rid, rs in res.items():
+        if rs.expired:
+            # expiry only ever happens to an already-due request past its
+            # deadline, and an expired request never ran
+            assert rs.req.deadline is not None
+            assert rs.finished_at > rs.req.deadline
+            assert rs.finished_at >= rs.req.arrival
+            assert rs.n_evals == 0 and rs.x0 is None
+        else:
+            assert rs.state.done and rs.x0 is not None
+            assert rs.n_evals >= rs.req.steps  # dpm runs extra mid evals
+            assert rs.finished_at is not None
+
+    # starvation bound holds at every tick
+    assert not gap_violations, gap_violations
+
+    # each admission wave orders by (priority desc, arrival, rid) and
+    # admits only due requests
+    for now, wave in waves:
+        assert wave == sorted(wave, key=lambda k: (-k[0], k[1], k[2]))
+        assert all(arr <= now for _, arr, _ in wave)
+
+    # scheduler accounting is consistent
+    assert eng.n_finished + eng.n_expired == n
+    assert not eng.batcher.inflight and not eng.batcher.pending
+    if policy == "fifo":
+        assert eng.batcher.preemptions == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_batcher_admit_respects_priority_arrival_rid(seed):
+    """Direct ContinuousBatcher.admit property: slots, order, expiry."""
+    rng = np.random.default_rng(seed)
+    max_batch = int(rng.integers(1, 5))
+    b = ContinuousBatcher(max_batch=max_batch,
+                          policy=str(rng.choice(POLICIES)))
+    n = int(rng.integers(1, 10))
+    key = jax.random.PRNGKey(0)
+    for rid in range(n):
+        arrival = float(rng.uniform(0.0, 2.0))
+        deadline = (None if rng.random() < 0.5
+                    else arrival + float(rng.uniform(-0.5, 1.0)))
+        st_ = sampler_init("ddim", SCHED, (1, 2, 2, 3), key, steps=1)
+        b.submit(RequestState(
+            GenRequest(rid, steps=1, arrival=arrival, deadline=deadline,
+                       priority=int(rng.integers(0, 3))), st_))
+    now = float(rng.uniform(0.0, 2.5))
+    admitted, expired = b.admit(now, tick=0)
+
+    keys = [(-r.req.priority, r.req.arrival, r.req.rid) for r in admitted]
+    assert keys == sorted(keys)
+    assert len(b.inflight) <= max_batch
+    for rs in admitted:
+        assert rs.req.arrival <= now and not rs.expired
+        assert rs.admitted_at == now
+    for rs in expired:
+        assert rs.expired
+        assert rs.req.arrival <= now
+        assert rs.req.deadline is not None and now > rs.req.deadline
+    # nothing admitted or expired stays pending; everything else does
+    leftover = {r.req.rid for r in b.pending}
+    taken = {r.req.rid for r in admitted} | {r.req.rid for r in expired}
+    assert leftover.isdisjoint(taken)
+    assert leftover | taken == set(range(n))
+
+
+def _mk_inflight(b, rid, *, deadline=None, last_tick=0):
+    return _mk_inflight_fx(b, rid, steps=2, deadline=deadline,
+                           last_tick=last_tick)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(POLICIES))
+def test_select_is_deterministic_and_serves_from_groups(seed, policy):
+    """select() is a pure function of (groups, tick, now) given fixed
+    scheduler state, and always returns a non-empty subset of one group."""
+    rng = np.random.default_rng(seed)
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=3, policy=policy)
+    b.cost.sample_s = 0.01
+    groups = {}
+    rid = 0
+    for seg in range(int(rng.integers(1, 4))):
+        members = []
+        for _ in range(int(rng.integers(1, 4))):
+            deadline = (None if rng.random() < 0.5
+                        else float(rng.uniform(0.0, 1.0)))
+            members.append(_mk_inflight(b, rid, deadline=deadline,
+                                        last_tick=int(rng.integers(0, 6))))
+            rid += 1
+        groups[seg] = members
+    now = float(rng.uniform(0.0, 1.0))
+    seg1, mem1 = b.select(groups, tick=6, now=now)
+    seg2, mem2 = b.select(groups, tick=6, now=now)
+    assert seg1 == seg2 and mem1 == mem2
+    assert mem1
+    assert {id(rs) for rs in mem1} <= {id(rs) for rs in groups[seg1]}
+    # starvation backstop: the oldest starved request's group always wins
+    starved = [rs for rs in b.inflight if 6 - rs.last_advance_tick >= 3]
+    if starved:
+        oldest = min(starved, key=lambda r: (r.last_advance_tick, r.req.rid))
+        assert oldest in mem1

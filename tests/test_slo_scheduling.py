@@ -1,0 +1,511 @@
+"""SLO-aware scheduling: slack-aware selection, preemption, async prefetch.
+
+Covers the deadline path's edges (mid-flight deadline pass, preemption at
+the exact tick boundary, all-expired ticks) under both policies, the
+fifo-vs-slo goodput discriminator on the ``tight_deadlines`` scenario,
+and the threading contract of the weight bank's background prefetch
+(digest-identical replay, single-build guarantee, counter
+reconciliation). Engine runs use a stub ``apply_fn`` and a simulated
+clock — the numerics are test_serving's job; what matters here is who
+runs when.
+"""
+import dataclasses
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from tests._serving_fixtures import (SCHED, mk_inflight as _mk_inflight,
+                                     multi_segment_bank as
+                                     _multi_segment_bank,
+                                     single_segment_bank as
+                                     _single_segment_bank)
+
+from repro.configs.diffusion_presets import tiny_ddim
+from repro.diffusion.samplers import sampler_init
+from repro.serving import (ContinuousBatcher, DiffusionServingEngine,
+                           GenRequest, RequestState, VirtualClock)
+from repro.serving.scheduler import CostModel, bucket_of, remaining_evals
+from repro.serving.traffic import (MetricsCollector, SimClock, get_scenario,
+                                   load_trace, run_scenario, submit_trace)
+from repro.serving.traffic.scenarios import resolve_trace_path
+
+GOLDEN = "tests/data/golden_trace.jsonl"
+
+
+def _stub_engine(max_batch=3, bank=None, **kw):
+    return DiffusionServingEngine(
+        tiny_ddim(4), SCHED, bank or _single_segment_bank(),
+        max_batch=max_batch,
+        apply_fn=lambda params, x, tb, y, ctx: 0.1 * x, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Slack-aware selection.
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_ewma_and_buckets():
+    cm = CostModel(alpha=0.5)
+    assert cm.eval_s(5) == 0.0           # unobserved: pure EDF slack
+    cm.observe_eval(0.8, 8)              # 8 padded rows -> 0.1/row
+    assert cm.sample_s == pytest.approx(0.1)
+    cm.observe_eval(0.0, 4)              # zero-duration ignored (virtual)
+    assert cm.sample_s == pytest.approx(0.1)
+    cm.observe_eval(0.2, 1)              # ewma toward 0.2
+    assert cm.sample_s == pytest.approx(0.15)
+    assert cm.eval_s(3) == pytest.approx(0.15 * 4)   # pads to bucket 4
+    cm.observe_switch(0.5)
+    cm.observe_switch(0.3)
+    assert cm.switch_s == pytest.approx(0.4)
+    assert bucket_of(1) == 1 and bucket_of(5) == 8
+
+
+def test_slo_select_prefers_urgent_group_over_largest():
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    big = [_mk_inflight(b, i) for i in range(3)]           # no deadlines
+    urgent = [_mk_inflight(b, 9, deadline=0.5)]
+    groups = {0: big, 1: urgent}
+    seg, members = b.select(groups, tick=1, now=0.0)
+    assert seg == 1 and members == urgent
+    # fifo picks the big group in the same state
+    b.policy = "fifo"
+    seg, members = b.select(groups, tick=1, now=0.0)
+    assert seg == 0 and members == big
+
+
+def test_slo_select_stays_on_current_segment_without_pressure():
+    """No deadline pressure: the switch penalty keeps the scheduler on
+    the current (or warm) bank segment even against a bigger group."""
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    b.cost.switch_s = 5.0
+    cur = [_mk_inflight(b, 0)]
+    big = [_mk_inflight(b, i) for i in (1, 2)]
+    groups = {3: cur, 4: big}
+    b.current_seg = 3
+    seg, _ = b.select(groups, tick=1, now=0.0)
+    assert seg == 3
+    # a warm segment pays no penalty -> the bigger group wins again
+    b.segment_warm = lambda s: True
+    seg, _ = b.select(groups, tick=1, now=0.0)
+    assert seg == 4
+    # and with no cost estimate yet, size breaks the tie as before
+    b.segment_warm = None
+    b.cost.switch_s = 0.0
+    seg, _ = b.select(groups, tick=1, now=0.0)
+    assert seg == 4
+
+
+def test_slo_select_ignores_already_missed_deadlines():
+    """A member whose deadline has already passed is a guaranteed miss:
+    it must exert no EDF pressure (its group scores like a deadline-free
+    one), so still-savable groups are not starved by a lost cause."""
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    doomed = [_mk_inflight(b, 0, steps=5, deadline=0.5)]   # now=2.0: past
+    big = [_mk_inflight(b, i) for i in (1, 2)]             # no deadlines
+    savable = [_mk_inflight(b, 9, deadline=2.4)]           # 0.4s slack
+    seg, members = b.select({0: doomed, 1: big, 2: savable}, tick=1,
+                            now=2.0)
+    assert seg == 2 and members == savable
+    # without the savable group, the doomed one ties at the horizon and
+    # the larger group wins
+    seg, _ = b.select({0: doomed, 1: big}, tick=1, now=2.0)
+    assert seg == 1
+
+
+def test_slack_and_splits_price_cfg_pairs_per_partition():
+    """A guided request contributes a row to BOTH class-conditioning
+    partitions, each padded to its own bucket, so group cost — and
+    therefore split decisions — must sum per-partition buckets."""
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    b.cost.sample_s = 0.1
+    tight = _mk_inflight(b, 0, steps=1, deadline=0.29)
+    guided = _mk_inflight(b, 1, steps=1, guidance_scale=2.0)
+    # partitions: y=None holds the uncond row (bucket 1), y-labeled
+    # holds tight + cond (bucket 2) -> 3 padded rows -> 0.3s > 0.29:
+    # tight only because the CFG pair spills into both partitions (two
+    # plain labeled members would cost bucket 2 = 0.2s and meet); alone
+    # (1 row) it meets -> split
+    seg, members = b.select({0: [tight, guided]}, tick=1, now=0.0)
+    assert members == [tight] and b.preemptions == 1
+
+
+def test_slo_select_starvation_backstop_overrides_urgency():
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=3, policy="slo")
+    urgent = [_mk_inflight(b, 0, deadline=0.1, last_tick=9)]
+    starved = [_mk_inflight(b, 1, last_tick=2)]
+    groups = {0: urgent, 1: starved}
+    seg, members = b.select(groups, tick=9, now=0.0)
+    assert seg == 1 and members == starved
+
+
+# ---------------------------------------------------------------------------
+# Preemption (group splits).
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_splits_group_and_counts_saves():
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    b.cost.sample_s = 0.1                 # eval cost 0.1 * bucket
+    tight = _mk_inflight(b, 0, steps=1, deadline=0.39)
+    loose = [_mk_inflight(b, i, steps=1) for i in (1, 2)]
+    groups = {0: [tight] + loose}
+    # full group pads to bucket 4 -> 0.4s > deadline; alone (bucket 1)
+    # the tight request still makes it -> split
+    seg, members = b.select(groups, tick=1, now=0.0)
+    assert seg == 0 and members == [tight]
+    assert b.preemptions == 2             # two deferred members
+    # the save is only booked when the tight request retires in time
+    assert b.deadline_saves == 0
+    tight.finished_at = 0.2
+    b.retire(tight)
+    assert b.deadline_saves == 1
+
+
+def test_preemption_exact_tick_boundary_is_a_meet_not_a_split():
+    """slack == 0 at the full bucket means the deadline is met exactly;
+    the group must NOT split (strict inequality)."""
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    b.cost.sample_s = 0.1
+    tight = _mk_inflight(b, 0, steps=1, deadline=0.4)   # 0.1 * bucket(4)
+    loose = [_mk_inflight(b, i, steps=1) for i in (1, 2)]
+    groups = {0: [tight] + loose}
+    seg, members = b.select(groups, tick=1, now=0.0)
+    assert members == [tight] + loose and b.preemptions == 0
+    # one epsilon past the boundary it splits
+    b2 = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    b2.cost.sample_s = 0.1
+    tight2 = _mk_inflight(b2, 0, steps=1, deadline=0.4 - 1e-6)
+    loose2 = [_mk_inflight(b2, i, steps=1) for i in (1, 2)]
+    _, members2 = b2.select({0: [tight2] + loose2}, tick=1, now=0.0)
+    assert members2 == [tight2] and b2.preemptions == 2
+
+
+def test_preemption_split_always_runs_the_saved_tight_member():
+    """A merely-low-slack member that would still meet its deadline at
+    the full bucket must not displace the tight member whose save
+    justified the split (regression: the run prefix was ordered by raw
+    slack over all members)."""
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    b.cost.sample_s = 0.1
+    # A: tight at bucket 4 (10 evals -> needs 4.0s, deadline 2.0), saved
+    # at bucket 1 (1.0s); B: NOT tight (0.1s spare at bucket 4) but lower
+    # slack than A at bucket 1; C: no deadline
+    a = _mk_inflight(b, 0, steps=10, deadline=2.0)
+    _mk_inflight(b, 1, steps=1, deadline=0.5)
+    _mk_inflight(b, 2, steps=1)
+    seg, members = b.select({0: b.inflight}, tick=1, now=0.0)
+    assert members == [a]
+    assert b.preemptions == 2
+
+
+def test_preemption_never_defers_doomed_or_starving_members():
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    b.cost.sample_s = 0.1
+    # everyone tight -> splitting cannot save anyone -> no split
+    m = [_mk_inflight(b, i, steps=1, deadline=0.39) for i in range(3)]
+    _, members = b.select({0: m}, tick=1, now=0.0)
+    assert len(members) == 3 and b.preemptions == 0
+    # a member one tick from the starvation backstop blocks the split
+    b2 = ContinuousBatcher(max_batch=8, starvation_ticks=4, policy="slo")
+    b2.cost.sample_s = 0.1
+    tight = _mk_inflight(b2, 0, steps=1, deadline=0.39, last_tick=9)
+    aging = _mk_inflight(b2, 1, steps=1, last_tick=6)   # gap 3 == starve-1
+    fresh = _mk_inflight(b2, 2, steps=1, last_tick=9)
+    _, members2 = b2.select({0: [tight, aging, fresh]}, tick=9, now=0.0)
+    assert len(members2) == 3 and b2.preemptions == 0
+
+
+def test_split_ignores_doomed_members_when_sizing_the_bucket():
+    """An already-missed member must not count as tight: it would
+    inflate the small bucket and cancel a split that saves a
+    still-reachable groupmate."""
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    b.cost.sample_s = 0.1
+    doomed = _mk_inflight(b, 0, steps=1, deadline=0.1,
+                          guidance_scale=2.0)          # 2 rows, past due
+    savable = _mk_inflight(b, 1, steps=1, deadline=1.35)
+    loose = _mk_inflight(b, 2, steps=1)
+    # now=1.0: full bucket = bucket_of(4 rows) -> 0.4s; savable misses at
+    # the full bucket (1.35 < 1.4) but meets alone (1.1 <= 1.35). If the
+    # doomed member counted as tight, small bucket would equal the full
+    # one and the split would be cancelled.
+    seg, members = b.select({0: [doomed, savable, loose]}, tick=1, now=1.0)
+    assert members == [savable]
+    assert b.preemptions == 2
+
+
+def test_split_spare_capacity_prefers_savable_over_doomed():
+    """When a split leaves spare bucket rows, a still-savable member
+    must take them ahead of an already-missed one (whose hugely negative
+    raw slack would otherwise rank it most urgent)."""
+    b = ContinuousBatcher(max_batch=8, starvation_ticks=10, policy="slo")
+    b.cost.sample_s = 0.1
+    now = 1.0
+    tight = [_mk_inflight(b, i, steps=1, deadline=now + 0.45)
+             for i in range(3)]
+    doomed = _mk_inflight(b, 3, steps=1, deadline=0.5)     # already past
+    savable = _mk_inflight(b, 4, steps=1, deadline=now + 0.85)
+    # full bucket: 5 rows -> 8 -> 0.8s (tight members miss, savable just
+    # meets); small bucket: 3 rows -> 4 -> 0.4s with one spare row
+    seg, members = b.select({0: tight + [doomed, savable]}, tick=1,
+                            now=now)
+    assert members == tight + [savable]    # spare row goes to the live one
+    assert b.preemptions == 1              # doomed deferred
+
+
+def test_fifo_policy_never_preempts_and_rejects_unknown_policy():
+    b = ContinuousBatcher(max_batch=4, policy="fifo")
+    b.cost.sample_s = 0.1
+    tight = _mk_inflight(b, 0, steps=1, deadline=0.01)
+    loose = [_mk_inflight(b, i, steps=1) for i in (1, 2)]
+    _, members = b.select({0: [tight] + loose}, tick=1, now=0.0)
+    assert len(members) == 3 and b.preemptions == 0
+    with pytest.raises(AssertionError, match="policy"):
+        ContinuousBatcher(policy="edf")
+
+
+def test_remaining_evals_counts_dpm_double():
+    st = sampler_init("ddim", SCHED, (1, 2, 2, 3), jax.random.PRNGKey(0),
+                      steps=3)
+    assert remaining_evals(RequestState(GenRequest(0, steps=3), st)) == 3
+    st2 = sampler_init("dpm_solver2", SCHED, (1, 2, 2, 3),
+                       jax.random.PRNGKey(0), steps=3)
+    assert remaining_evals(RequestState(GenRequest(1, steps=3), st2)) == 6
+
+
+# ---------------------------------------------------------------------------
+# Deadline-path edges through the engine.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["fifo", "slo"])
+def test_deadline_passing_mid_flight_completes_as_miss(policy):
+    """A request whose deadline passes while in flight must run to
+    completion and score as a deadline miss — never as an expiry."""
+    clock = [0.0]
+    eng = _stub_engine(max_batch=2, policy=policy, now_fn=lambda: clock[0])
+    col = MetricsCollector().attach(eng)
+    eng.submit(steps=3, arrival=0.0, deadline=0.5)
+    eng.on_tick_end.append(lambda e: clock.__setitem__(0, clock[0] + 0.4))
+    res = eng.run()
+    rs = res[0]
+    assert not rs.expired and rs.state.done and rs.x0 is not None
+    assert rs.n_evals == 3
+    assert rs.finished_at > rs.req.deadline        # finished late...
+    s = col.summary()
+    assert s["requests"] == 1 and s["expired"] == 0
+    assert s["deadline_misses"] == 1               # ...and scored as a miss
+    assert eng.stats()["expired"] == 0
+
+
+@pytest.mark.parametrize("policy", ["fifo", "slo"])
+def test_all_expired_admission_wave_is_safe(policy):
+    """A tick whose whole admission wave expires must produce an empty
+    group set without reaching selection (no crash, callbacks fire)."""
+    clock = [10.0]
+    eng = _stub_engine(policy=policy, now_fn=lambda: clock[0])
+    ticks = []
+    eng.on_tick_end.append(lambda e: ticks.append(e.tick_count))
+    for i in range(3):
+        eng.submit(steps=1, arrival=0.0, deadline=1.0 + i)
+    res = eng.run()
+    assert len(res) == 3 and all(rs.expired for rs in res.values())
+    assert eng.n_expired == 3 and eng.n_finished == 0
+    assert ticks, "on_tick_end must fire even on empty ticks"
+    for rs in res.values():
+        assert rs.finished_at > rs.req.deadline
+
+
+def test_expiry_boundary_is_strict():
+    """At now == deadline a request is still admissible (expiry needs
+    now strictly past the deadline)."""
+    clock = [1.0]
+    eng = _stub_engine(now_fn=lambda: clock[0])
+    eng.submit(steps=1, arrival=0.0, deadline=1.0)
+    res = eng.run()
+    assert not res[0].expired and res[0].n_evals == 1
+
+
+# ---------------------------------------------------------------------------
+# fifo vs slo: the tight_deadlines discriminator.
+# ---------------------------------------------------------------------------
+
+
+def _run_policy(policy, scn, *, tick_base=0.02, sample_s=0.015):
+    clock = SimClock(tick_base_s=tick_base, sample_s=sample_s)
+    eng = _stub_engine(max_batch=scn.max_batch, bank=_multi_segment_bank(),
+                       policy=policy, now_fn=clock.now, max_idle_sleep=0.0)
+    clock.attach(eng)
+    summary = run_scenario(scn, eng, seed=0)
+    return summary, eng
+
+
+def test_sim_clock_charges_the_forward_before_completion_stamps():
+    """A completion must pay for its own tick: deadline verdicts at the
+    exact service cost are misses, not one-tick-early meets."""
+    cost = 0.02 + 0.015 * 1               # base + one padded row
+    for deadline, met in ((cost - 1e-3, False), (cost + 1e-3, True)):
+        clock = SimClock()
+        eng = _stub_engine(max_batch=1, now_fn=clock.now,
+                           max_idle_sleep=0.0)
+        clock.attach(eng)
+        eng.submit(steps=1, arrival=0.0, deadline=deadline)
+        res = eng.run()
+        rs = res[0]
+        assert not rs.expired
+        assert rs.finished_at == pytest.approx(cost)
+        assert (rs.finished_at <= deadline) is met
+
+
+def test_compile_ticks_do_not_poison_the_cost_ewma():
+    """A tick that traced+compiled a new (bucket, has_y) forward must
+    not feed its (compile-inflated) duration into sample_s."""
+    clock = SimClock()
+    eng = _stub_engine(max_batch=1, now_fn=clock.now, max_idle_sleep=0.0)
+    clock.attach(eng)                     # primes sample_s = 0.015
+    eng.submit(steps=1, arrival=0.0)
+    eng.run()
+    # single tick, fresh jit entry -> observation skipped, prime intact
+    assert eng.batcher.cost.sample_s == clock.sample_s
+    eng.submit(steps=1, arrival=0.0)      # same bucket: now observed
+    eng.run()
+    assert eng.batcher.cost.sample_s != clock.sample_s
+
+
+def test_tight_deadlines_scenario_slo_beats_fifo():
+    """The registry's fifo-vs-slo discriminator: largest-group-wins
+    demonstrably fails the tight tier that slack-aware selection meets,
+    on the same deterministic simulated clock."""
+    scn = get_scenario("tight_deadlines")
+    scn = dataclasses.replace(
+        scn, n_requests=12, max_batch=8,
+        mix=dataclasses.replace(scn.mix, steps=5, steps_jitter=1))
+    sum_f, eng_f = _run_policy("fifo", scn)
+    sum_s, eng_s = _run_policy("slo", scn)
+    # both serve every request...
+    assert sum_f["requests"] + sum_f["expired"] == 12
+    assert sum_s["requests"] + sum_s["expired"] == 12
+    # ...but only the slack-aware policy meets the tight tier
+    assert sum_s["goodput_frac"] > sum_f["goodput_frac"]
+    assert eng_f.stats()["preemptions"] == 0
+    # determinism: the whole comparison replays bit-identically
+    sum_f2, _ = _run_policy("fifo", scn)
+    sum_s2, _ = _run_policy("slo", scn)
+    assert sum_f2["goodput_frac"] == sum_f["goodput_frac"]
+    assert sum_s2["goodput_frac"] == sum_s["goodput_frac"]
+
+
+# ---------------------------------------------------------------------------
+# Async prefetch: determinism + threading contract.
+# ---------------------------------------------------------------------------
+
+
+def test_golden_replay_digest_identical_with_prefetch_on_off():
+    reqs, _ = load_trace(resolve_trace_path(GOLDEN))
+
+    def replay(prefetch):
+        eng = _stub_engine(max_batch=2, bank=_multi_segment_bank(),
+                           clock=VirtualClock(), prefetch=prefetch)
+        assert not eng.async_prefetch     # virtual clock forces sync builds
+        submit_trace(eng, reqs)
+        res = eng.run()
+        return {rid: (rs.n_evals, np.asarray(rs.x0).tobytes())
+                for rid, rs in res.items()}
+
+    assert replay(True) == replay(False)
+
+
+def test_async_prefetch_overlaps_and_matches_sync_outputs():
+    def run(async_prefetch):
+        bank = _multi_segment_bank()
+        eng = _stub_engine(max_batch=2, bank=bank,
+                           async_prefetch=async_prefetch)
+        for i in range(4):                # churn: staggered submit/retire
+            eng.submit(steps=5 + i % 3, seed=i)
+        res = eng.run()
+        return bank, {r: np.asarray(rs.x0).tobytes()
+                      for r, rs in res.items()}
+
+    bank_a, out_a = run(True)
+    bank_s, out_s = run(False)
+    assert out_a == out_s                  # threading never changes outputs
+    for bank in (bank_a, bank_s):
+        assert not bank._building          # run() drains
+        assert bank.builds == bank.misses + bank.prefetches
+    assert bank_a.prefetches >= 1
+
+
+def test_threaded_churn_never_builds_a_segment_twice():
+    bank = _multi_segment_bank()
+    bank.max_cached = bank.n_segments      # no evictions -> one build each
+    n_built = {}
+    built_lock = threading.Lock()
+    orig_build = bank._build
+
+    def counting_build(seg):
+        with built_lock:
+            n_built[seg.index] = n_built.get(seg.index, 0) + 1
+        return orig_build(seg)
+
+    bank._build = counting_build
+    segs = list(range(bank.n_segments))
+    errs = []
+
+    def worker(wid):
+        rng = np.random.default_rng(wid)
+        try:
+            for _ in range(30):
+                seg = int(rng.choice(segs))
+                if rng.random() < 0.5:
+                    bank.prefetch(seg, block=bool(rng.random() < 0.3))
+                else:
+                    bank.params_for_segment(seg)
+        except Exception as e:             # surface from the thread
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    bank.drain()
+    assert not errs
+    assert set(n_built) == set(segs)
+    assert all(n == 1 for n in n_built.values()), n_built
+    # counter reconciliation: every build was either a miss or a prefetch
+    assert bank.builds == bank.misses + bank.prefetches == len(segs)
+    d = bank.describe()
+    assert d["builds"] == len(segs) and d["build_joins"] == bank.build_joins
+
+
+def test_failed_background_build_counts_and_keeps_reconciliation():
+    """A prefetch build that raises on the worker thread must not
+    silently break builds + build_failures == misses + prefetches, and
+    the segment must remain buildable afterwards."""
+    bank = _multi_segment_bank()
+    orig_build = bank._build
+    bank._build = lambda seg: (_ for _ in ()).throw(RuntimeError("boom"))
+    assert bank.prefetch(0, block=False)
+    bank.drain()                            # swallows the ownerless error
+    assert bank.build_failures == 1 and bank.builds == 0
+    assert bank.builds + bank.build_failures == (bank.misses
+                                                 + bank.prefetches)
+    assert not bank.is_cached(0)
+    bank._build = orig_build                # segment recovers on retry
+    bank.params_for_segment(0)
+    assert bank.is_cached(0)
+    assert bank.builds + bank.build_failures == (bank.misses
+                                                 + bank.prefetches) == 2
+    assert bank.describe()["build_failures"] == 1
+
+
+def test_prefetch_nonblocking_returns_false_while_building():
+    bank = _multi_segment_bank()
+    started = bank.prefetch(0, block=False)
+    again = bank.prefetch(0, block=False)  # already building or cached
+    bank.drain()
+    assert started and not again
+    assert bank.builds == 1 and bank.prefetches == 1
+    assert bank.is_cached(0)

@@ -25,7 +25,7 @@ from repro.serving.traffic import (OPEN_LOOP, SLO, ClosedLoopGenerator,
                                    list_scenarios, load_trace,
                                    open_loop_trace, run_scenario, save_trace,
                                    submit_trace, validate_trace)
-from repro.serving.traffic.metrics import percentile
+from repro.serving.traffic.metrics import _Event, percentile
 from repro.serving.traffic.scenarios import resolve_trace_path
 
 KEY = jax.random.PRNGKey(0)
@@ -305,6 +305,69 @@ def test_metrics_collector_summary_windows_and_slo():
     assert not bad["passed"]
     assert not bad["checks"]["p95_s"]["ok"]
     assert not bad["checks"]["goodput_frac"]["ok"]
+
+
+def test_percentile_edge_cases():
+    # single sample: every percentile is that sample
+    for p in (0, 50, 95, 100):
+        assert percentile([3.25], p) == 3.25
+    # two samples: the midpoint index rounds half-even (nearest rank:
+    # p50 of two samples is the lower one)
+    assert percentile([1.0, 2.0], 50) == 1.0
+    assert percentile([1.0, 2.0], 51) == 2.0
+    # out-of-range p clamps instead of wrapping around the list
+    assert percentile([1.0, 2.0, 3.0], 150) == 3.0
+    assert percentile([1.0, 2.0, 3.0], -50) == 1.0
+
+
+def test_metrics_windows_edge_cases():
+    # no events, no ticks: no windows at all
+    assert MetricsCollector().windows() == []
+
+    # single sample finishing at t=0: exactly one window, all stats sane
+    col = MetricsCollector(window_s=1.0)
+    col.events.append(_Event(arrival=0.0, finished=0.0, latency=0.0,
+                             met_deadline=True, expired=False))
+    rows = col.windows()
+    assert len(rows) == 1
+    assert rows[0]["throughput_rps"] == 1.0 and rows[0]["p95_s"] == 0.0
+
+    # an event finishing exactly ON a window boundary belongs to the
+    # window it opens ([i*w, (i+1)*w) half-open), including widths where
+    # t/w floats just under an integer (0.3 // 0.1 == 2.0)
+    for w, t in ((1.0, 2.0), (0.1, 0.3), (0.25, 0.75)):
+        col = MetricsCollector(window_s=w)
+        col.events.append(_Event(arrival=0.0, finished=t, latency=t,
+                                 met_deadline=True, expired=False))
+        rows = col.windows()
+        assert len(rows) == round(t / w) + 1, (w, t)
+        assert rows[-1]["throughput_rps"] == pytest.approx(1.0 / w)
+        assert all(r["throughput_rps"] == 0.0 for r in rows[:-1])
+
+    # an empty middle window still emits a zero row, and the cache-hit
+    # delta spans it instead of being dropped
+    col = MetricsCollector(window_s=1.0)
+    col.events.append(_Event(arrival=0.0, finished=0.5, latency=0.5,
+                             met_deadline=True, expired=False))
+    col.events.append(_Event(arrival=0.0, finished=2.5, latency=2.5,
+                             met_deadline=True, expired=False))
+    col.ticks.append((0.5, 0, 1, 2, 0))     # hits=2
+    col.ticks.append((2.5, 0, 1, 6, 2))     # +4 hits, +2 misses later
+    rows = col.windows()
+    assert len(rows) == 3
+    assert rows[1]["throughput_rps"] == 0.0 and rows[1]["queue_depth"] == 0.0
+    assert "cache_hit_rate" not in rows[1]
+    assert rows[0]["cache_hit_rate"] == pytest.approx(1.0)
+    assert rows[2]["cache_hit_rate"] == pytest.approx(4 / 6)
+
+    # all-expired window: zero throughput, expiries counted, no latencies
+    col = MetricsCollector(window_s=1.0)
+    col.events.append(_Event(arrival=0.0, finished=0.2, latency=None,
+                             met_deadline=False, expired=True))
+    rows = col.windows()
+    assert rows[0]["expired"] == 1 and rows[0]["throughput_rps"] == 0.0
+    assert rows[0]["p95_s"] == 0.0
+    assert col.summary()["requests"] == 0
 
 
 def test_metrics_tick_series_records_queue_depth():
