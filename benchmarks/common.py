@@ -88,3 +88,29 @@ def timer(fn, *args, warmup: int = 2, iters: int = 10) -> float:
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     return float(np.median(times) * 1e6)
+
+
+def timer_interleaved(fns, argss, warmup: int = 2,
+                      iters: int = 20) -> list[float]:
+    """Best wall-time (us) per function, measured round-robin.
+
+    Each iteration times every function back to back, so host-load drift
+    lands on all of them equally and the *ratios* between the returned
+    values are meaningful — rows timed minutes apart by ``timer`` are
+    not comparable at the couple-percent level on a shared host.
+
+    The per-slot *minimum* is reported: wall-clock can only be inflated
+    by interference, never deflated, so the fastest of N round-robin
+    iterations is the estimate of uncontended cost least distorted by
+    the load spikes a shared host mixes into medians.
+    """
+    for fn, args in zip(fns, argss):
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    times = [[] for _ in fns]
+    for _ in range(iters):
+        for slot, (fn, args) in enumerate(zip(fns, argss)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            times[slot].append(time.perf_counter() - t0)
+    return [float(np.min(t) * 1e6) for t in times]

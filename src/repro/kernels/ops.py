@@ -1,9 +1,18 @@
 """Jit'd wrappers around the Pallas kernels with XLA fallbacks.
 
 Dispatch policy: on TPU the Pallas kernels run compiled; on CPU (this
-container) the XLA reference path runs for real numerics, while tests
-exercise the kernels in interpret mode against the ref oracles. Set
-``FORCE=\"pallas\"`` / ``\"xla\"`` / ``\"interpret\"`` to override (tests use it).
+container) the fast XLA serving path (``kernels.xla_serve``) runs for
+real numerics, while tests exercise the kernels in interpret mode against
+the ref oracles. Set ``FORCE="pallas"`` / ``"xla"`` / ``"interpret"`` to
+override (tests use it) — ``"xla"`` pins the *pure reference* oracles,
+bypassing the fast serving path too.
+
+Conv routing (``CONV_ROUTE``): the Pallas conv has two routes — the
+implicit-GEMM kernel (no patch matrix; the default on compiled TPU when
+its whole-slab blocks fit VMEM) and the im2col + fused-matmul route (the
+index-map oracle, and what interpret mode runs by default so the golden
+replay trace keeps its pinned digest). ``"implicit"`` / ``"im2col"``
+force a route; ``"auto"`` applies the policy above.
 """
 from __future__ import annotations
 
@@ -12,9 +21,11 @@ import jax.numpy as jnp
 
 from repro.core.qmodule import PackedW4
 from repro.kernels import ref as _ref
-from repro.quant.fakequant import KIND_FP_SIGNED, KIND_INT_AFFINE, QuantizerParams
+from repro.quant.fakequant import (KIND_FP_SIGNED, KIND_FP_UNSIGNED,
+                                   KIND_INT_AFFINE, QuantizerParams)
 
 FORCE: str | None = None
+CONV_ROUTE: str = "auto"  # "auto" | "implicit" | "im2col"
 
 
 def _use_pallas() -> bool:
@@ -29,6 +40,11 @@ def _interpret() -> bool:
     return FORCE == "interpret" or jax.default_backend() != "tpu"
 
 
+def _use_fast_xla() -> bool:
+    """The fast XLA serving path: default (unforced) dispatch off-TPU."""
+    return FORCE is None and jax.default_backend() != "tpu"
+
+
 def msfp_quantize(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
     """Fused fake-quant (no STE — serving path; training uses quant.ste_qdq).
 
@@ -38,6 +54,9 @@ def msfp_quantize(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
     if _use_pallas() and qp.kind != 2 and jnp.ndim(qp.maxval) == 0:
         from repro.kernels.msfp_quant import msfp_qdq
         return msfp_qdq(x, qp, interpret=_interpret())
+    if _use_fast_xla():
+        from repro.kernels import xla_serve
+        return xla_serve.fast_qdq(x, qp)  # bit-exact, bitcast octave
     return _ref.ref_msfp_qdq(x, qp)
 
 
@@ -63,6 +82,9 @@ def w4_matmul(x: jnp.ndarray, pw: PackedW4) -> jnp.ndarray:
         out = w4_matmul_2d(x2, pw.packed, pw.scale, pw.zero_point,
                            exp_bits=pw.exp_bits, man_bits=pw.man_bits,
                            signed=pw.signed, interpret=_interpret())
+    elif _use_fast_xla() and jnp.ndim(pw.packed) == 2:
+        from repro.kernels import xla_serve
+        out = xla_serve.w4_matmul(x2, pw, x.dtype)
     else:
         out = _ref.ref_w4_matmul(x2, pw, x.dtype)
     return out.reshape(*lead, out.shape[-1])
@@ -92,6 +114,9 @@ def w4a4_matmul(x: jnp.ndarray, pw: PackedW4,
             act_exp_bits=act_qp.exp_bits, act_man_bits=act_qp.man_bits,
             act_signed=(act_qp.kind == KIND_FP_SIGNED),
             interpret=_interpret())
+    elif _use_fast_xla() and act_qp.kind != KIND_INT_AFFINE:
+        from repro.kernels import xla_serve
+        out = xla_serve.fused_matmul(x2, pw, act_qp, x.dtype)
     else:
         out = _ref.ref_w4a4_matmul(x2, pw, act_qp, x.dtype)
     return out.reshape(*lead, out.shape[-1])
@@ -101,30 +126,78 @@ def _normalize_stride(stride) -> tuple[int, int]:
     return (stride, stride) if isinstance(stride, int) else tuple(stride)
 
 
+def _normalize_padding(padding):
+    """Hashable (jit-static) padding spec."""
+    if isinstance(padding, str):
+        return padding
+    return tuple(tuple(int(q) for q in p) for p in padding)
+
+
+def _conv_route(x, pw, strides, pads, fused: bool) -> str:
+    """Pick the Pallas conv route. ``auto``: compiled TPU runs the
+    implicit-GEMM kernel when its whole-slab blocks fit the VMEM budget;
+    interpret mode keeps the im2col oracle route (the golden replay
+    trace's digest is pinned to its accumulation order)."""
+    if CONV_ROUTE in ("implicit", "im2col"):
+        return CONV_ROUTE
+    if _interpret():
+        return "im2col"
+    from repro.kernels.conv import IMPLICIT_VMEM_BUDGET, implicit_vmem_bytes
+    fits = implicit_vmem_bytes(
+        x.shape, pw.shape, strides, pads, fused=fused,
+        itemsize=x.dtype.itemsize) <= IMPLICIT_VMEM_BUDGET
+    return "implicit" if fits else "im2col"
+
+
 def w4a4_conv2d(x: jnp.ndarray, pw: PackedW4,
                 act_qp: QuantizerParams | None = None, *,
                 stride=1, padding="SAME") -> jnp.ndarray:
-    """NHWC conv on a packed HWIO W4 weight via im2col + fused matmul.
+    """NHWC conv on a packed HWIO W4 weight.
 
-    The Pallas route unfolds x into the (B*OH*OW, kh*kw*cin) patch matrix
-    matching the 2D conv pack layout and applies the MSFP act snap to the
-    patch tiles in VMEM (``w4a4_matmul_2d``). Only signed per-tensor act
-    quantizers fuse: SAME padding's zeros must stay exactly zero through
-    the snap, and unsigned grids map 0 to the zero-point — those (and
-    INT-affine) pre-quantize x with ``msfp_quantize`` and run the plain
-    packed matmul. Fallback elsewhere is the jnp oracle (decode + conv).
+    Pallas routes (see ``_conv_route``):
+      * implicit GEMM — the index maps gather input slabs straight from
+        the NHWC activation (no patch matrix). Signed *and* unsigned
+        per-tensor FP act quantizers fuse: the in-kernel snap masks the
+        pad positions back to exact zeros per tile, so the old
+        pre-quantize-through-HBM round-trip only remains for INT-affine
+        and per-channel act params.
+      * im2col + fused matmul — the index-map oracle and VMEM-overflow
+        fallback. Only signed per-tensor acts fuse here (SAME padding's
+        zeros must survive the snap; unsigned grids map 0 to the
+        zero-point), others pre-quantize.
+    Off-TPU the fast XLA tap-loop (``xla_serve.implicit_conv``) serves
+    unforced dispatch; ``FORCE="xla"`` pins the decode+conv oracle.
     """
     strides = _normalize_stride(stride)
-    if act_qp is not None and not (act_qp.kind == KIND_FP_SIGNED
+    pads = _normalize_padding(padding)
+    if _use_pallas() and len(pw.shape) == 4 and _pallas_w4_ok(pw):
+        route = _conv_route(x, pw, strides, pads, fused=act_qp is not None)
+        fusable = (KIND_FP_SIGNED, KIND_FP_UNSIGNED) if route == "implicit" \
+            else (KIND_FP_SIGNED,)
+        if act_qp is not None and not (act_qp.kind in fusable
+                                       and jnp.ndim(act_qp.maxval) == 0):
+            x = msfp_quantize(x, act_qp)
+            act_qp = None
+        if route == "implicit":
+            from repro.kernels.conv import w4a4_conv2d_implicit
+            return w4a4_conv2d_implicit(x, pw, act_qp, stride=strides,
+                                        padding=pads, interpret=_interpret())
+        from repro.kernels.conv import w4a4_conv2d_im2col
+        return w4a4_conv2d_im2col(x, pw, act_qp, stride=strides,
+                                  padding=pads, interpret=_interpret())
+    fast = _use_fast_xla() and len(pw.shape) == 4 and _pallas_w4_ok(pw)
+    fusable = (KIND_FP_SIGNED, KIND_FP_UNSIGNED) if fast \
+        else (KIND_FP_SIGNED,)
+    if act_qp is not None and not (act_qp.kind in fusable
                                    and jnp.ndim(act_qp.maxval) == 0):
         x = msfp_quantize(x, act_qp)
         act_qp = None
-    if _use_pallas() and len(pw.shape) == 4 and _pallas_w4_ok(pw):
-        from repro.kernels.conv import w4a4_conv2d_im2col
-        return w4a4_conv2d_im2col(x, pw, act_qp, stride=strides,
-                                  padding=padding, interpret=_interpret())
+    if fast:
+        from repro.kernels import xla_serve
+        return xla_serve.implicit_conv(x, pw, act_qp, stride=strides,
+                                       padding=pads, dtype=x.dtype)
     return _ref.ref_w4a4_conv2d(x, pw, act_qp, stride=strides,
-                                padding=padding, dtype=x.dtype)
+                                padding=pads, dtype=x.dtype)
 
 
 def kv4_encode(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:

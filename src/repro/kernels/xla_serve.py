@@ -1,0 +1,247 @@
+"""Fast XLA serving path for non-TPU backends.
+
+Hosts without a TPU can't run the Pallas kernels compiled, and the
+pure-jnp oracles in ``ref.py`` — while the ground truth — leave easy
+wall-clock on the table. This module is the XLA mirror of the Pallas
+fixes, used by the ``ops`` dispatcher when ``FORCE`` is unset on CPU/GPU
+(``FORCE="xla"`` still pins the untouched oracles):
+
+* ``fast_qdq`` — the MSFP snap with the octave read from the float32
+  exponent *field* (one bitcast + shift) instead of ``floor(log2 y)``,
+  the step and its reciprocal rebuilt by bitcasting the exponent back
+  (power-of-two scaling is exact, so multiply-by-reciprocal == divide),
+  and the sign restored with a bit-or instead of a ``sign(x)`` multiply.
+  Equal to ``quant.fakequant.fp_qdq`` for every input (see the gate
+  note below). ~4x faster than the transcendental path on CPU.
+
+* ``fast_decode`` / ``dequant_halves`` — the packed-nibble decode with
+  the magnitude's float32 bits *constructed* (exponent field
+  ``p + 126``, mantissa field ``m << (23 - man)``) instead of calling
+  ``exp2``, reading each nibble straight out of the packed byte. The
+  split-half pack layout means the lo/hi nibbles are the weight's left/
+  right column halves, so the decode never concatenates a full-width
+  code matrix — the matmuls below consume the two halves directly.
+
+* ``w4_matmul`` / ``fused_matmul`` — decode-and-dot with the weight as
+  a *runtime* operand (in the engine, params are jit arguments: nothing
+  here constant-folds away). The activation snap's output stays in
+  float32 through the dot — the oracle's intermediate re-round to the
+  input dtype is skipped, so for sub-f32 inputs the result differs from
+  ``ref_w4a4_matmul`` by at most that one rounding; for float32 inputs
+  the two are equal (same snap, same decode, same per-column
+  accumulation order). On this class of host the packed route beats the
+  bf16 dense path it replaces because the bf16 GEMM re-converts its 2x
+  bigger weight to f32 every call, which costs more than nibble decode.
+
+* ``implicit_conv`` — the tap-loop implicit GEMM: quantize, pad once,
+  then kh*kw strided-slice matmuls accumulated in f32. No
+  (B*OH*OW, kh*kw*cin) patch matrix is ever built, which is what makes
+  the packed conv route cheaper than decode-then-``lax.conv`` in wall
+  time, not just bytes. Differs from the ``lax.conv`` oracle only by
+  f32 accumulation order (<= 1 bf16 ulp).
+
+Exactness gate: the bitcast paths are exact by construction, but the
+*references* lower ``exp2`` through ``exp(x * ln2)`` on XLA CPU, which
+lands off the exact power of two for large octaves (e.g. ``exp2(13) ->
+8192.004``). Up to E3's octave range both are exact and equal, so
+formats with ``exp_bits > 3`` (and INT-affine, which has no octave)
+fall back to the reference implementations.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.qmodule import PackedW4, decode_codes
+from repro.kernels import ref as _ref
+from repro.kernels.conv import conv_pads
+from repro.quant.fakequant import KIND_INT_AFFINE, QuantizerParams
+from repro.quant.formats import FPFormat
+
+# Plain int (not a jnp array): this module is often first imported inside
+# a traced function, and a module-level jnp constant born under a trace
+# leaks that trace into later jits.
+_SIGN_BIT = -(2**31)
+
+
+def _fast_snap(y: jnp.ndarray, fmt: FPFormat) -> jnp.ndarray:
+    """Round base-grid-scaled magnitudes (y >= 0, f32) to the grid.
+
+    Mirrors ``formats.snap_to_base_grid`` with the octave from the
+    exponent field: for normal f32, ``(bits >> 23) - 127 == floor(log2)``
+    exactly. ``step = 2^t`` and ``1/step = 2^-t`` are built by placing
+    the exponent back into an f32 bit pattern; scaling by a power of two
+    is exact, so ``round(y * inv) * step == round(y / step) * step``
+    bit for bit, without the vector divide.
+    """
+    man = fmt.man_bits
+    if fmt.exp_bits == 0:
+        step = 2.0**-man
+        return jnp.minimum(jnp.round(y * 2.0**man) * step, fmt.base_max)
+    max_oct = 2**fmt.exp_bits - 2
+    safe = jnp.maximum(y, 2.0**-40)
+    e = (lax.bitcast_convert_type(safe, jnp.int32) >> 23) - 127
+    t = jnp.clip(e, 0, max_oct) - man
+    step = lax.bitcast_convert_type((t + 127) << 23, jnp.float32)
+    inv = lax.bitcast_convert_type((127 - t) << 23, jnp.float32)
+    return jnp.minimum(jnp.round(y * inv) * step, fmt.base_max)
+
+
+def _qdq_f32(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
+    """The snap of ``fast_qdq``, input upcast to f32 and *left* there.
+
+    Callers that feed a dot keep the snapped activation in f32 (the
+    values sit on a scaled grid that bf16 can't always represent; the
+    oracle's re-round to the input dtype is the one step skipped).
+    Signed formats restore the sign by OR-ing the input's sign bit onto
+    the snapped magnitude — same result as ``sign(x) * v`` up to the
+    sign of zero, which compares equal.
+    """
+    fmt = qp.fmt
+    xf = x.astype(jnp.float32)
+    if qp.kind == KIND_INT_AFFINE or qp.exp_bits > 3:
+        return _ref.ref_msfp_qdq(xf, qp)
+    maxval = jnp.asarray(qp.maxval, jnp.float32)
+    scale = maxval / fmt.base_max
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    if fmt.signed:
+        yq = _fast_snap(jnp.abs(xf) * inv, fmt) * scale
+        sb = lax.bitcast_convert_type(xf, jnp.int32) & _SIGN_BIT
+        return lax.bitcast_convert_type(
+            lax.bitcast_convert_type(yq, jnp.int32) | sb, jnp.float32)
+    z = jnp.asarray(qp.zero_point, jnp.float32)
+    y = jnp.clip((xf - z) * inv, 0.0, None)
+    return _fast_snap(y, fmt) * scale + z
+
+
+def fast_qdq(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
+    """Drop-in ``apply_qdq``: equal results, bitcast octave selection.
+
+    INT-affine quantizers have no octave to select and high-exponent
+    formats (E4+) hit the references' inexact ``exp2`` (module
+    docstring), so both stay on the reference path. ``maxval`` may be a
+    scalar or any shape broadcastable against ``x`` (per-channel), like
+    the reference.
+    """
+    if qp.kind == KIND_INT_AFFINE or qp.exp_bits > 3:
+        return _ref.ref_msfp_qdq(x, qp)
+    return _qdq_f32(x, qp).astype(x.dtype)
+
+
+def fast_decode(code: jnp.ndarray, fmt: FPFormat, scale, zero_point=0.0,
+                dtype=jnp.float32) -> jnp.ndarray:
+    """``qmodule.decode_codes`` with the magnitude's f32 bits constructed.
+
+    A normal code (p >= 1) decodes to ``2^(p-1) * (1 + m/2^M)``, whose
+    float32 representation is literally exponent field ``p + 126`` and
+    mantissa field ``m << (23 - M)`` — one shift-or-bitcast instead of
+    an ``exp2`` call per element. Subnormals (p == 0) are ``m * 2^-M``,
+    an exact int-to-float convert and constant multiply. Equal to
+    ``decode_codes`` for ``exp_bits <= 3`` (callers gate; see module
+    docstring).
+    """
+    man = fmt.man_bits
+    code = code.astype(jnp.int32)
+    nbits = fmt.exp_bits + fmt.man_bits
+    if fmt.signed:
+        sign = (code >> nbits) & 1
+        code = code & ((1 << nbits) - 1)
+    if fmt.exp_bits == 0:
+        mag = code.astype(jnp.float32) * (2.0**-man)
+    else:
+        p = code >> man
+        m = code & (2**man - 1)
+        norm = lax.bitcast_convert_type(
+            ((p + 126) << 23) | (m << (23 - man)), jnp.float32)
+        mag = jnp.where(p == 0, m.astype(jnp.float32) * (2.0**-man), norm)
+    val = mag * (jnp.asarray(scale, jnp.float32) / fmt.base_max)
+    if fmt.signed:
+        val = jnp.where(sign == 1, -val, val)
+    else:
+        val = val + zero_point
+    return val.astype(dtype)
+
+
+def _half_params(v, half: int, hi: bool):
+    """Slice a scale/zero-point to one pack half: per-channel vectors
+    (last axis spanning the full 2*half output width) split; scalars and
+    keepdims shapes broadcast over both halves unsliced."""
+    v = jnp.asarray(v, jnp.float32)
+    if v.ndim == 0 or v.shape[-1] != 2 * half:
+        return v
+    return v[..., half:] if hi else v[..., :half]
+
+
+def dequant_halves(pw: PackedW4,
+                   dtype=jnp.float32) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode a 2D pack's lo/hi nibbles as the two (K, N/2) column halves.
+
+    Reads each nibble straight from the packed byte — no unpacked code
+    matrix, no full-width concat; the caller dots against the halves and
+    joins the *outputs* (2x smaller). Falls back to ``decode_codes`` per
+    half for formats past the exactness gate.
+    """
+    fmt = pw.fmt
+    half = pw.packed.shape[-1]
+    dec = fast_decode if fmt.exp_bits <= 3 else decode_codes
+    c = pw.packed.astype(jnp.int32)
+    lo = dec(c & 0xF, fmt, _half_params(pw.scale, half, False),
+             _half_params(pw.zero_point, half, False), dtype)
+    hi = dec((c >> 4) & 0xF, fmt, _half_params(pw.scale, half, True),
+             _half_params(pw.zero_point, half, True), dtype)
+    return lo, hi
+
+
+def serve_dequant(pw: PackedW4, dtype=jnp.float32) -> jnp.ndarray:
+    """Full decoded weight (any pack rank), ``fast_decode`` where exact."""
+    lo, hi = dequant_halves(pw, dtype)
+    return jnp.concatenate([lo, hi], axis=-1).reshape(pw.shape)
+
+
+def _dot_halves(xq: jnp.ndarray, pw: PackedW4, dtype) -> jnp.ndarray:
+    lo, hi = dequant_halves(pw, jnp.float32)
+    return jnp.concatenate([xq @ lo, xq @ hi], axis=-1).astype(dtype)
+
+
+def w4_matmul(x2: jnp.ndarray, pw: PackedW4, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """x2 (M, K) @ decoded pack, f32 accumulate, two half-width dots."""
+    return _dot_halves(x2.astype(jnp.float32), pw, dtype)
+
+
+def fused_matmul(x2: jnp.ndarray, pw: PackedW4, act_qp: QuantizerParams,
+                 dtype=jnp.bfloat16) -> jnp.ndarray:
+    """qdq(x) @ dequant(W), the snapped activation held in f32 (module
+    docstring) — the serving replacement for the bf16-fallback chain."""
+    return _dot_halves(_qdq_f32(x2, act_qp), pw, dtype)
+
+
+def implicit_conv(x: jnp.ndarray, pw: PackedW4,
+                  act_qp: QuantizerParams | None = None, *,
+                  stride: tuple[int, int] = (1, 1), padding="SAME",
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Tap-loop implicit-GEMM conv on the packed HWIO weight.
+
+    Quantizes before padding (the fake-quant oracle's order — the
+    inserted zeros are exact), then accumulates one strided-slice matmul
+    per tap; the patch matrix never exists.
+    """
+    kh, kw, cin, cout = pw.shape
+    b, h, w, c = x.shape
+    assert c == cin, (x.shape, pw.shape)
+    xf = (_qdq_f32(x, act_qp) if act_qp is not None
+          else x.astype(jnp.float32))
+    sh, sw = stride
+    (ph0, ph1), (pw0, pw1) = conv_pads(h, w, kh, kw, stride, padding)
+    oh = (h + ph0 + ph1 - kh) // sh + 1
+    ow = (w + pw0 + pw1 - kw) // sw + 1
+    if ph0 or ph1 or pw0 or pw1:
+        xf = jnp.pad(xf, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+    wd = serve_dequant(pw, jnp.float32)
+    acc = None
+    for i in range(kh):
+        for j in range(kw):
+            sl = xf[:, i:i + sh * (oh - 1) + 1:sh,
+                    j:j + sw * (ow - 1) + 1:sw, :].reshape(-1, cin)
+            t = sl @ wd[i, j]
+            acc = t if acc is None else acc + t
+    return acc.reshape(b, oh, ow, cout).astype(dtype)

@@ -188,6 +188,12 @@ def main(argv=None) -> None:
     ap.add_argument("--act-maxval", type=float, default=6.0)
     ap.add_argument("--kernels", default="auto",
                     choices=["auto", "xla", "interpret", "pallas"])
+    ap.add_argument("--conv-route", default="auto",
+                    choices=["auto", "implicit", "im2col"],
+                    help="Pallas conv route: implicit GEMM vs im2col "
+                         "(auto: implicit on compiled TPU when it fits "
+                         "VMEM; im2col in interpret mode — the golden "
+                         "trace digest is pinned to its numerics)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny everything (CI: 2 concurrent requests)")
@@ -195,6 +201,8 @@ def main(argv=None) -> None:
 
     if args.kernels != "auto":
         ops.FORCE = args.kernels
+    if args.conv_route != "auto":
+        ops.CONV_ROUTE = args.conv_route
     if args.smoke:
         args.image_size = min(args.image_size, 8)
         args.T = min(args.T, 50)
@@ -294,14 +302,14 @@ def main(argv=None) -> None:
           f"{s['idle_sleeps']} idle sleeps")
 
     # conv parity: every even-width non-io conv weight must serve packed
-    # (the im2col W4A4 route), never from the bf16 fallback bucket.
+    # (the packed W4A4 conv routes), never from the bf16 fallback bucket.
     from repro.common.tree import flatten_paths
     flat_q = dict(flatten_paths(q_params))
     conv_w = [k for k, v in flat_q.items()
               if k.endswith("/w") and getattr(v, "ndim", 0) == 4]
     packed_sites = set(bank.pack_stats["packed"])
     n_conv_packed = sum(k in packed_sites for k in conv_w)
-    print(f"conv sites: {n_conv_packed}/{len(conv_w)} packed (im2col W4A4)")
+    print(f"conv sites: {n_conv_packed}/{len(conv_w)} packed (W4A4 conv route)")
     if args.plan == "absmax":
         missing = [k for k in conv_w
                    if k not in io_sites(q_params)

@@ -87,7 +87,8 @@ def conv2d_apply(p: dict, x: jnp.ndarray, *, stride: int = 1,
                  ctx: QuantContext | None = None,
                  site: str | None = None, act_qp=None) -> jnp.ndarray:
     """Mirrors ``dense_apply``'s serving contract: PackedW4 weights route
-    through the im2col W4A4 conv kernel (never decode-then-XLA-conv), and
+    through the W4A4 conv kernels (implicit GEMM where it fits, im2col
+    fallback — never decode-then-XLA-conv; see ``ops.w4a4_conv2d``), and
     ``act_qp`` / serve-mode ``ctx.serving_qp`` quantizes the input either
     inside that kernel or, for dense-fallback weights, in a standalone
     pass — conv sites see the same numerics the fake-quant model did."""

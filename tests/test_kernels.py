@@ -481,3 +481,377 @@ def test_kv4_zero_row():
     packed, scale = ops.kv4_encode(t)
     back = ops.kv4_decode(packed, scale, jnp.float32)
     np.testing.assert_allclose(np.asarray(back), 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Implicit-GEMM conv kernel (interpret-mode parity for the new index maps)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel,stride,padding",
+                         [(3, (1, 1), "SAME"), (3, (2, 2), "SAME"),
+                          (1, (1, 1), "SAME"), (5, (2, 1), "VALID"),
+                          (3, (1, 1), ((2, 1), (0, 3)))])
+@pytest.mark.parametrize("act", ["none", "signed", "unsigned"])
+def test_implicit_conv_kernel_parity(kernel, stride, padding, act, rng):
+    """The implicit-GEMM kernel's index maps (whole-slab gather, tap
+    unroll, pad re-masking) vs the jnp oracle on odd shapes, strides,
+    SAME/VALID and explicit pad pairs."""
+    from repro.kernels.conv import w4a4_conv2d_implicit
+
+    cin, cout = 6, 10
+    w = jnp.asarray(rng.normal(size=(kernel, kernel, cin, cout))
+                    .astype(np.float32)) * 0.3
+    pw = _pack_conv(w)
+    x = jnp.asarray(rng.normal(size=(2, 9, 7, cin)).astype(np.float32)) * 0.4
+    act_qp = {"none": None,
+              "signed": QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
+                                        jnp.float32(1.2)),
+              "unsigned": QuantizerParams(KIND_FP_UNSIGNED, 2, 2, 4,
+                                          jnp.float32(1.5),
+                                          jnp.float32(-0.15))}[act]
+    out = w4a4_conv2d_implicit(x, pw, act_qp, stride=stride, padding=padding,
+                               interpret=True)
+    want = ref.ref_w4a4_conv2d(x, pw, act_qp, stride=stride, padding=padding,
+                               dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=5e-4)
+
+
+def test_implicit_conv_kernel_per_channel_bf16(rng):
+    from repro.kernels.conv import w4a4_conv2d_implicit
+
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 6)).astype(np.float32)) * 0.1
+    mv = jnp.maximum(jnp.max(jnp.abs(w), axis=(0, 1, 2)), 1e-6)
+    pw = pack_weight(w, QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, mv))
+    x = jnp.asarray(rng.normal(size=(2, 5, 5, 4)).astype(np.float32)
+                    * 0.3).astype(jnp.bfloat16)
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(1.0))
+    out = w4a4_conv2d_implicit(x, pw, act_qp, stride=(1, 1), padding="SAME",
+                               interpret=True)
+    want = ref.ref_w4a4_conv2d(x, pw, act_qp, stride=(1, 1), padding="SAME",
+                               dtype=jnp.bfloat16)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=1e-2, rtol=2e-2)
+
+
+def test_conv_route_forced_implicit_is_used(monkeypatch, rng):
+    """CONV_ROUTE="implicit" must run the implicit kernel (and never the
+    im2col route or the decode oracle), even in interpret mode."""
+    import repro.kernels.conv as conv_mod
+
+    monkeypatch.setattr(ops, "CONV_ROUTE", "implicit")
+    monkeypatch.setattr(ops._ref, "ref_w4a4_conv2d",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            AssertionError("decode fallback")))
+    monkeypatch.setattr(conv_mod, "w4a4_conv2d_im2col",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            AssertionError("im2col route")))
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(1, 6, 6, 4)).astype(np.float32))
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+    out = ops.w4a4_conv2d(x, _pack_conv(w), act_qp)
+    assert out.shape == (1, 6, 6, 8)
+
+
+def test_conv_route_interpret_default_stays_im2col(monkeypatch, rng):
+    """Unforced interpret-mode dispatch keeps the im2col route — the
+    golden replay trace's digest is pinned to its accumulation order."""
+    import repro.kernels.conv as conv_mod
+
+    called = {}
+    real = conv_mod.w4a4_conv2d_im2col
+
+    def spy(*a, **k):
+        called["im2col"] = True
+        return real(*a, **k)
+
+    monkeypatch.setattr(conv_mod, "w4a4_conv2d_im2col", spy)
+    monkeypatch.setattr(conv_mod, "w4a4_conv2d_implicit",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            AssertionError("implicit under interpret auto")))
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(1, 6, 6, 4)).astype(np.float32))
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+    assert ops.CONV_ROUTE == "auto"
+    ops.w4a4_conv2d(x, _pack_conv(w), act_qp)
+    assert called.get("im2col")
+
+
+# ---------------------------------------------------------------------------
+# Fused matmul: ragged K with unsigned formats; snap-once re-tiling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wfmt", [(2, 2), (3, 1)], ids=str)
+@pytest.mark.parametrize("k", [600, 96])
+def test_w4_matmul_ragged_k_unsigned_weight(wfmt, k, rng):
+    """K % bk != 0 (600 vs the 512 K-tile) with unsigned weight formats:
+    the zero-point K-padding correction must count only valid rows."""
+    from repro.kernels.w4_matmul import w4_matmul_2d
+
+    e, mm = wfmt
+    w = jnp.asarray(np.abs(rng.normal(size=(k, 66))).astype(np.float32))
+    qp = QuantizerParams(KIND_FP_UNSIGNED, e, mm, 4, jnp.float32(2.2),
+                         jnp.float32(0.4))
+    pw = pack_weight(w, qp)
+    x = jnp.asarray(rng.normal(size=(33, k)).astype(np.float32))
+    out = w4_matmul_2d(x, pw.packed, pw.scale, pw.zero_point,
+                       exp_bits=e, man_bits=mm, signed=False, interpret=True)
+    want = ref.ref_w4_matmul(x, pw, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("act_kind", [KIND_FP_SIGNED, KIND_FP_UNSIGNED])
+def test_w4a4_fused_ragged_k_unsigned_act(act_kind, rng):
+    from repro.kernels.w4_matmul import w4a4_matmul_2d
+
+    k = 600
+    w = jnp.asarray(rng.normal(size=(k, 66)).astype(np.float32))
+    qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.5))
+    pw = pack_weight(w, qp)
+    act_qp = QuantizerParams(act_kind, 2, 1, 4, jnp.float32(3.0),
+                             jnp.float32(-0.2))
+    x = jnp.asarray(rng.normal(size=(17, k)).astype(np.float32))
+    out = w4a4_matmul_2d(
+        x, pw.packed, pw.scale, pw.zero_point, act_qp.maxval,
+        act_qp.zero_point, exp_bits=2, man_bits=1, signed=True,
+        act_exp_bits=2, act_man_bits=1,
+        act_signed=(act_kind == KIND_FP_SIGNED), interpret=True)
+    want = ref.ref_w4a4_matmul(x, pw, act_qp, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-4, rtol=5e-4)
+
+
+def test_snap_once_retiling_matches_per_program_snap(monkeypatch, rng):
+    """The persistent-VMEM snap-once path (one snap per (i, k) tile) must
+    be bit-identical to snapping in every (h, j) program — same tiles,
+    same accumulation order."""
+    import repro.kernels.w4_matmul as wm
+
+    k = 600
+    w = jnp.asarray(rng.normal(size=(k, 66)).astype(np.float32))
+    pw = pack_weight(w, QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
+                                        jnp.float32(2.5)))
+    act_qp = QuantizerParams(KIND_FP_UNSIGNED, 2, 1, 4, jnp.float32(3.0),
+                             jnp.float32(-0.2))
+    x = jnp.asarray(rng.normal(size=(17, k)).astype(np.float32))
+
+    def run():
+        return wm.w4a4_matmul_2d(
+            x, pw.packed, pw.scale, pw.zero_point, act_qp.maxval,
+            act_qp.zero_point, exp_bits=2, man_bits=1, signed=True,
+            act_exp_bits=2, act_man_bits=1, act_signed=False, interpret=True)
+
+    snap_once = run()
+    monkeypatch.setattr(wm, "XQ_VMEM_BUDGET", 0)   # disable the scratch
+    per_program = run()
+    assert jnp.array_equal(snap_once, per_program)
+
+
+# ---------------------------------------------------------------------------
+# Fast XLA serving path (kernels.xla_serve)
+# ---------------------------------------------------------------------------
+
+
+XS_FMTS = [(KIND_FP_SIGNED, 2, 1), (KIND_FP_SIGNED, 3, 0),
+           (KIND_FP_SIGNED, 1, 2), (KIND_FP_SIGNED, 0, 3),
+           (KIND_FP_UNSIGNED, 2, 2), (KIND_FP_UNSIGNED, 3, 1)]
+
+
+@pytest.mark.parametrize("kind,e,m", XS_FMTS)
+def test_fast_qdq_equals_oracle(kind, e, m, rng):
+    """Bitcast-octave snap == transcendental oracle, including octave
+    boundaries and zeros/huge/tiny, f32 and bf16, scalar + per-channel."""
+    from repro.kernels import xla_serve
+
+    qp = QuantizerParams(kind, e, m, 4, jnp.float32(2.3), jnp.float32(-0.15))
+    x = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32)) * 3
+    adv = jnp.asarray(np.array(
+        [0.0, -0.0, 1.0, np.nextafter(2.0, 0), np.nextafter(2.0, 3),
+         -6.0, 6.0, 1e-30, -1e-30, 3.3e38, 0.49999997, 0.5] * 4,
+        np.float32)).reshape(4, 12)
+    for inp in (x, adv, x.astype(jnp.bfloat16)):
+        want = ref.ref_msfp_qdq(inp, qp)
+        got = xla_serve.fast_qdq(inp, qp)
+        assert got.dtype == inp.dtype
+        assert jnp.array_equal(want, got), (kind, e, m, inp.dtype)
+    mv = jnp.abs(jnp.asarray(rng.normal(size=(128,)).astype(np.float32))) + .5
+    qpc = QuantizerParams(kind, e, m, 4, mv, jnp.float32(0.1))
+    assert jnp.array_equal(ref.ref_msfp_qdq(x, qpc),
+                           xla_serve.fast_qdq(x, qpc))
+
+
+def test_fast_qdq_high_exp_formats_fall_back_to_ref(monkeypatch, rng):
+    """E4+ octaves hit XLA CPU's inexact exp2 in the *reference*; the
+    fast path must route them to the reference, not disagree with it."""
+    from repro.kernels import xla_serve
+
+    called = {}
+    real = ref.ref_msfp_qdq
+
+    def spy(*a, **k):
+        called["ref"] = True
+        return real(*a, **k)
+
+    monkeypatch.setattr(xla_serve._ref, "ref_msfp_qdq", spy)
+    qp = QuantizerParams(KIND_FP_SIGNED, 4, 0, 5, jnp.float32(2.0e4))
+    x = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32)) * 1e4
+    assert jnp.array_equal(xla_serve.fast_qdq(x, qp), real(x, qp))
+    assert called.get("ref")
+
+
+def test_fast_decode_equals_decode_codes():
+    from repro.core.qmodule import decode_codes
+    from repro.kernels import xla_serve
+    from repro.quant.formats import FPFormat
+
+    for e, m, signed in [(2, 1, True), (3, 0, True), (1, 2, True),
+                         (0, 3, True), (2, 1, False), (3, 0, False),
+                         (2, 2, False), (0, 4, False)]:
+        fmt = FPFormat(e, m, signed)
+        codes = jnp.arange(2 ** min(e + m + signed, 4), dtype=jnp.uint8)
+        for sc in (0.7, 2.0, 1e-3, 137.0):
+            want = decode_codes(codes, fmt, jnp.float32(sc), 0.3, jnp.float32)
+            got = xla_serve.fast_decode(codes, fmt, jnp.float32(sc), 0.3,
+                                        jnp.float32)
+            assert jnp.array_equal(want, got), (e, m, signed, sc)
+
+
+def test_serve_dequant_matches_dequant_weight(rng):
+    from repro.core.qmodule import dequant_weight
+    from repro.kernels import xla_serve
+
+    w = jnp.asarray(rng.normal(size=(3, 3, 6, 10)).astype(np.float32)) * 0.3
+    mv = jnp.maximum(jnp.max(jnp.abs(w), axis=(0, 1, 2)), 1e-6)
+    for qp in (QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(0.9)),
+               QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, mv),
+               QuantizerParams(KIND_FP_UNSIGNED, 2, 2, 4, jnp.float32(0.9),
+                               jnp.float32(-0.4))):
+        pw = pack_weight(w, qp)
+        assert jnp.array_equal(dequant_weight(pw, jnp.float32),
+                               xla_serve.serve_dequant(pw, jnp.float32))
+
+
+def test_xla_serve_matmuls_bit_identical_for_f32(rng):
+    """f32 in, f32 out: same snap, same decode, same per-column
+    accumulation order as the oracles — equality, not allclose."""
+    from repro.kernels import xla_serve
+
+    k, n = 384, 66
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(4.0))
+    for qp in (QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0)),
+               QuantizerParams(KIND_FP_UNSIGNED, 2, 2, 4, jnp.float32(2.0),
+                               jnp.float32(-1.0))):
+        pw = pack_weight(w, qp)
+        x = jnp.asarray(rng.normal(size=(32, k)).astype(np.float32))
+        assert jnp.array_equal(xla_serve.w4_matmul(x, pw, jnp.float32),
+                               ref.ref_w4_matmul(x, pw, jnp.float32))
+        assert jnp.array_equal(
+            xla_serve.fused_matmul(x, pw, act_qp, jnp.float32),
+            ref.ref_w4a4_matmul(x, pw, act_qp, jnp.float32))
+
+
+def test_xla_serve_fused_bf16_close_to_oracle(rng):
+    """bf16 in: the snapped activation stays f32 through the dot (the
+    oracle re-rounds to bf16) — within one bf16 ulp relative."""
+    from repro.kernels import xla_serve
+
+    k, n = 384, 66
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    pw = pack_weight(w, QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
+                                        jnp.float32(2.0)))
+    act_qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(4.0))
+    x = jnp.asarray(rng.normal(size=(32, k)).astype(np.float32)) \
+        .astype(jnp.bfloat16)
+    got = xla_serve.fused_matmul(x, pw, act_qp, jnp.bfloat16)
+    want = ref.ref_w4a4_matmul(x, pw, act_qp, jnp.bfloat16)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=5e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("stride,padding",
+                         [((1, 1), "SAME"), ((2, 2), "SAME"),
+                          ((2, 1), "VALID"), ((1, 1), ((2, 1), (0, 3)))])
+@pytest.mark.parametrize("act", ["none", "signed", "unsigned"])
+def test_xla_serve_implicit_conv_parity(stride, padding, act, rng):
+    from repro.kernels import xla_serve
+
+    w = jnp.asarray(rng.normal(size=(3, 3, 6, 10)).astype(np.float32)) * 0.3
+    pw = _pack_conv(w)
+    x = jnp.asarray(rng.normal(size=(2, 9, 7, 6)).astype(np.float32)) * 0.4
+    act_qp = {"none": None,
+              "signed": QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
+                                        jnp.float32(1.2)),
+              "unsigned": QuantizerParams(KIND_FP_UNSIGNED, 2, 2, 4,
+                                          jnp.float32(1.5),
+                                          jnp.float32(-0.15))}[act]
+    out = xla_serve.implicit_conv(x, pw, act_qp, stride=stride,
+                                  padding=padding, dtype=jnp.float32)
+    want = ref.ref_w4a4_conv2d(x, pw, act_qp, stride=stride, padding=padding,
+                               dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=5e-4)
+
+
+def test_force_xla_pins_pure_reference(monkeypatch, rng):
+    """FORCE="xla" must never touch the fast serving path — it is the
+    oracle escape hatch."""
+    import repro.kernels.xla_serve as xla_serve
+
+    ops.FORCE = "xla"
+    for name in ("fast_qdq", "fused_matmul", "w4_matmul", "implicit_conv"):
+        monkeypatch.setattr(xla_serve, name,
+                            lambda *a, _n=name, **k: (_ for _ in ()).throw(
+                                AssertionError(f"fast path {_n} under xla")))
+    w = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    pw = pack_weight(w, QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
+                                        jnp.float32(2.0)))
+    qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+    x = jnp.asarray(rng.normal(size=(8, 96)).astype(np.float32))
+    assert jnp.array_equal(ops.msfp_quantize(x, qp), ref.ref_msfp_qdq(x, qp))
+    assert jnp.array_equal(ops.w4_matmul(x, pw),
+                           ref.ref_w4_matmul(x, pw, x.dtype))
+    assert jnp.array_equal(ops.w4a4_matmul(x, pw, qp),
+                           ref.ref_w4a4_matmul(x, pw, qp, x.dtype))
+    wc = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    xc = jnp.asarray(rng.normal(size=(1, 6, 6, 4)).astype(np.float32))
+    assert jnp.array_equal(
+        ops.w4a4_conv2d(xc, _pack_conv(wc), qp),
+        ref.ref_w4a4_conv2d(xc, _pack_conv(wc), qp, dtype=xc.dtype))
+
+
+def test_default_cpu_dispatch_routes_to_fast_path(monkeypatch, rng):
+    """Unforced off-TPU dispatch serves via xla_serve (matmul, fused,
+    conv, qdq) — the reference oracles are for tests, not serving."""
+    import repro.kernels.xla_serve as xla_serve
+
+    ops.FORCE = None
+    assert jax.default_backend() != "tpu"
+    seen = set()
+    for name in ("fast_qdq", "fused_matmul", "w4_matmul", "implicit_conv"):
+        real = getattr(xla_serve, name)
+
+        def spy(*a, _n=name, _real=real, **k):
+            seen.add(_n)
+            return _real(*a, **k)
+
+        monkeypatch.setattr(xla_serve, name, spy)
+    w = jnp.asarray(rng.normal(size=(96, 64)).astype(np.float32))
+    pw = pack_weight(w, QuantizerParams(KIND_FP_SIGNED, 2, 1, 4,
+                                        jnp.float32(2.0)))
+    qp = QuantizerParams(KIND_FP_SIGNED, 2, 1, 4, jnp.float32(2.0))
+    x = jnp.asarray(rng.normal(size=(8, 96)).astype(np.float32))
+    ops.msfp_quantize(x, qp)
+    ops.w4_matmul(x, pw)
+    ops.w4a4_matmul(x, pw, qp)
+    wc = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    xc = jnp.asarray(rng.normal(size=(1, 6, 6, 4)).astype(np.float32))
+    ops.w4a4_conv2d(xc, _pack_conv(wc), qp)
+    assert seen == {"fast_qdq", "fused_matmul", "w4_matmul", "implicit_conv"}
