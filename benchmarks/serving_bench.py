@@ -140,6 +140,14 @@ def rows(log=print) -> list[dict]:
                 "us_per_call": summary["wall_s"] * 1e6
                 / max(sum(rs.n_evals for rs in eng.results.values()), 1),
                 "goodput_frac": summary["goodput_frac"],
+                # structured scheduler/bank counters (folded into the
+                # collector summary) so regressions diff on fields, not
+                # on parsing the derived string
+                "preemptions": summary["preemptions"],
+                "deadline_saves": summary["deadline_saves"],
+                "bank_builds": summary["bank_builds"],
+                "bank_build_joins": summary["bank_build_joins"],
+                "prefetch_hits": summary["prefetch_hits"],
                 "derived": f"goodput {summary['goodput_frac']:.2f} "
                            f"({summary['deadline_misses']} misses, "
                            f"{summary['expired']} expired); "
@@ -165,6 +173,11 @@ def rows(log=print) -> list[dict]:
         out.append({
             "name": f"traffic_{name}",
             "us_per_call": summary["wall_s"] * 1e6 / max(evals, 1),
+            "preemptions": summary["preemptions"],
+            "deadline_saves": summary["deadline_saves"],
+            "bank_builds": summary["bank_builds"],
+            "bank_build_joins": summary["bank_build_joins"],
+            "prefetch_hits": summary["prefetch_hits"],
             "derived": f"{summary['throughput_rps']:.2f} req/s; "
                        f"p95 {summary['p95_s']:.2f}s; goodput "
                        f"{summary['goodput_frac']:.2f} "
@@ -174,4 +187,10 @@ def rows(log=print) -> list[dict]:
 
     for r in out:
         log(f"  {r['name']},{r['us_per_call']:.0f}us,{r['derived']}")
+
+    # observability overhead: same deadline_mix/SimClock run obs on vs
+    # off — the row pins the disabled-path cost, the derived column the
+    # enabled ratio and the outcome-identity check (see obs_overhead)
+    from benchmarks import obs_overhead
+    out.extend(obs_overhead.rows(log=log, iters=2))
     return out

@@ -27,6 +27,23 @@ from repro.quant.fakequant import (KIND_FP_SIGNED, KIND_FP_UNSIGNED,
 FORCE: str | None = None
 CONV_ROUTE: str = "auto"  # "auto" | "implicit" | "im2col"
 
+# Profiling hook (serving/obs/kernel_profile installs it; ops never
+# imports obs). When set, every dispatch decision routes through
+# PROFILER.call(op, route_label, thunk, probe) — counted when tracing
+# into a jit program, timed when eager. None costs one global read.
+PROFILER = None
+
+
+def _dispatch(op: str, route: str, thunk, probe=None):
+    if PROFILER is None:
+        return thunk()
+    return PROFILER.call(op, route, thunk, probe=probe)
+
+
+def _route_label() -> str:
+    """Label for the Pallas branch: compiled vs interpret-mode."""
+    return "interpret" if _interpret() else "pallas"
+
 
 def _use_pallas() -> bool:
     if FORCE == "pallas" or FORCE == "interpret":
@@ -53,11 +70,16 @@ def msfp_quantize(x: jnp.ndarray, qp: QuantizerParams) -> jnp.ndarray:
     """
     if _use_pallas() and qp.kind != 2 and jnp.ndim(qp.maxval) == 0:
         from repro.kernels.msfp_quant import msfp_qdq
-        return msfp_qdq(x, qp, interpret=_interpret())
+        return _dispatch("msfp_quantize", _route_label(),
+                         lambda: msfp_qdq(x, qp, interpret=_interpret()),
+                         probe=x)
     if _use_fast_xla():
         from repro.kernels import xla_serve
-        return xla_serve.fast_qdq(x, qp)  # bit-exact, bitcast octave
-    return _ref.ref_msfp_qdq(x, qp)
+        return _dispatch("msfp_quantize", "xla_fast",
+                         lambda: xla_serve.fast_qdq(x, qp),  # bit-exact
+                         probe=x)
+    return _dispatch("msfp_quantize", "ref",
+                     lambda: _ref.ref_msfp_qdq(x, qp), probe=x)
 
 
 def _pallas_w4_ok(pw: PackedW4) -> bool:
@@ -79,14 +101,21 @@ def w4_matmul(x: jnp.ndarray, pw: PackedW4) -> jnp.ndarray:
     x2 = x.reshape(-1, k)
     if _use_pallas() and _pallas_w4_ok(pw):
         from repro.kernels.w4_matmul import w4_matmul_2d
-        out = w4_matmul_2d(x2, pw.packed, pw.scale, pw.zero_point,
-                           exp_bits=pw.exp_bits, man_bits=pw.man_bits,
-                           signed=pw.signed, interpret=_interpret())
+        out = _dispatch(
+            "w4_matmul", _route_label(),
+            lambda: w4_matmul_2d(x2, pw.packed, pw.scale, pw.zero_point,
+                                 exp_bits=pw.exp_bits, man_bits=pw.man_bits,
+                                 signed=pw.signed, interpret=_interpret()),
+            probe=x)
     elif _use_fast_xla() and jnp.ndim(pw.packed) == 2:
         from repro.kernels import xla_serve
-        out = xla_serve.w4_matmul(x2, pw, x.dtype)
+        out = _dispatch("w4_matmul", "xla_fast",
+                        lambda: xla_serve.w4_matmul(x2, pw, x.dtype),
+                        probe=x)
     else:
-        out = _ref.ref_w4_matmul(x2, pw, x.dtype)
+        out = _dispatch("w4_matmul", "ref",
+                        lambda: _ref.ref_w4_matmul(x2, pw, x.dtype),
+                        probe=x)
     return out.reshape(*lead, out.shape[-1])
 
 
@@ -107,18 +136,28 @@ def w4a4_matmul(x: jnp.ndarray, pw: PackedW4,
             and act_qp.kind != KIND_INT_AFFINE
             and jnp.ndim(act_qp.maxval) == 0):
         from repro.kernels.w4_matmul import w4a4_matmul_2d
-        out = w4a4_matmul_2d(
-            x2, pw.packed, pw.scale, pw.zero_point,
-            act_qp.maxval, act_qp.zero_point,
-            exp_bits=pw.exp_bits, man_bits=pw.man_bits, signed=pw.signed,
-            act_exp_bits=act_qp.exp_bits, act_man_bits=act_qp.man_bits,
-            act_signed=(act_qp.kind == KIND_FP_SIGNED),
-            interpret=_interpret())
+        out = _dispatch(
+            "w4a4_matmul", _route_label(),
+            lambda: w4a4_matmul_2d(
+                x2, pw.packed, pw.scale, pw.zero_point,
+                act_qp.maxval, act_qp.zero_point,
+                exp_bits=pw.exp_bits, man_bits=pw.man_bits,
+                signed=pw.signed,
+                act_exp_bits=act_qp.exp_bits, act_man_bits=act_qp.man_bits,
+                act_signed=(act_qp.kind == KIND_FP_SIGNED),
+                interpret=_interpret()),
+            probe=x)
     elif _use_fast_xla() and act_qp.kind != KIND_INT_AFFINE:
         from repro.kernels import xla_serve
-        out = xla_serve.fused_matmul(x2, pw, act_qp, x.dtype)
+        out = _dispatch("w4a4_matmul", "xla_fast",
+                        lambda: xla_serve.fused_matmul(x2, pw, act_qp,
+                                                       x.dtype),
+                        probe=x)
     else:
-        out = _ref.ref_w4a4_matmul(x2, pw, act_qp, x.dtype)
+        out = _dispatch("w4a4_matmul", "ref",
+                        lambda: _ref.ref_w4a4_matmul(x2, pw, act_qp,
+                                                     x.dtype),
+                        probe=x)
     return out.reshape(*lead, out.shape[-1])
 
 
@@ -180,11 +219,18 @@ def w4a4_conv2d(x: jnp.ndarray, pw: PackedW4,
             act_qp = None
         if route == "implicit":
             from repro.kernels.conv import w4a4_conv2d_implicit
-            return w4a4_conv2d_implicit(x, pw, act_qp, stride=strides,
-                                        padding=pads, interpret=_interpret())
+            return _dispatch(
+                "w4a4_conv2d", f"{_route_label()}:implicit",
+                lambda: w4a4_conv2d_implicit(x, pw, act_qp, stride=strides,
+                                             padding=pads,
+                                             interpret=_interpret()),
+                probe=x)
         from repro.kernels.conv import w4a4_conv2d_im2col
-        return w4a4_conv2d_im2col(x, pw, act_qp, stride=strides,
-                                  padding=pads, interpret=_interpret())
+        return _dispatch(
+            "w4a4_conv2d", f"{_route_label()}:im2col",
+            lambda: w4a4_conv2d_im2col(x, pw, act_qp, stride=strides,
+                                       padding=pads, interpret=_interpret()),
+            probe=x)
     fast = _use_fast_xla() and len(pw.shape) == 4 and _pallas_w4_ok(pw)
     fusable = (KIND_FP_SIGNED, KIND_FP_UNSIGNED) if fast \
         else (KIND_FP_SIGNED,)
@@ -194,10 +240,16 @@ def w4a4_conv2d(x: jnp.ndarray, pw: PackedW4,
         act_qp = None
     if fast:
         from repro.kernels import xla_serve
-        return xla_serve.implicit_conv(x, pw, act_qp, stride=strides,
-                                       padding=pads, dtype=x.dtype)
-    return _ref.ref_w4a4_conv2d(x, pw, act_qp, stride=strides,
-                                padding=pads, dtype=x.dtype)
+        return _dispatch(
+            "w4a4_conv2d", "xla_fast",
+            lambda: xla_serve.implicit_conv(x, pw, act_qp, stride=strides,
+                                            padding=pads, dtype=x.dtype),
+            probe=x)
+    return _dispatch(
+        "w4a4_conv2d", "ref",
+        lambda: _ref.ref_w4a4_conv2d(x, pw, act_qp, stride=strides,
+                                     padding=pads, dtype=x.dtype),
+        probe=x)
 
 
 def kv4_encode(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -207,9 +259,12 @@ def kv4_encode(t: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     t2 = t.reshape(-1, hd)
     if _use_pallas():
         from repro.kernels.kv4 import kv4_encode_2d
-        packed, scale = kv4_encode_2d(t2, interpret=_interpret())
+        packed, scale = _dispatch(
+            "kv4_encode", _route_label(),
+            lambda: kv4_encode_2d(t2, interpret=_interpret()), probe=t)
     else:
-        packed, scale = _ref.ref_kv4_encode(t2)
+        packed, scale = _dispatch("kv4_encode", "ref",
+                                  lambda: _ref.ref_kv4_encode(t2), probe=t)
     return packed.reshape(*lead, hd // 2), scale.reshape(lead)
 
 
@@ -221,7 +276,13 @@ def kv4_decode(packed: jnp.ndarray, scale: jnp.ndarray,
     s2 = scale.reshape(-1)
     if _use_pallas():
         from repro.kernels.kv4 import kv4_decode_2d
-        out = kv4_decode_2d(p2, s2, dtype=dtype, interpret=_interpret())
+        out = _dispatch(
+            "kv4_decode", _route_label(),
+            lambda: kv4_decode_2d(p2, s2, dtype=dtype,
+                                  interpret=_interpret()),
+            probe=packed)
     else:
-        out = _ref.ref_kv4_decode(p2, s2, dtype)
+        out = _dispatch("kv4_decode", "ref",
+                        lambda: _ref.ref_kv4_decode(p2, s2, dtype),
+                        probe=packed)
     return out.reshape(*lead, 2 * hh)

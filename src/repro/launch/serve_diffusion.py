@@ -28,12 +28,21 @@ into a replayable trace.
 ``--plan absmax`` (default) builds the calibration-free abs-max FP4 plan;
 ``--plan search`` runs the paper's calibrate + MSE-search pipeline first
 (slow — minutes on CPU).
+
+Observability (``serving/obs``) switches on when any of ``--trace-out``
+(Perfetto-loadable span trace), ``--metrics-out`` (text exposition of
+the metrics registry) or ``--report-json`` (machine-readable run report
+— summary, SLO verdicts, engine stats, kernel route counts, outcome
+digest; what CI asserts on) is given; otherwise the engine runs with the
+no-op ``NULL_OBS``. Tracing follows the engine clock, so a virtual-clock
+replay's trace — and its digest — is deterministic.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import hashlib
+import json
 import time
 
 import jax
@@ -48,6 +57,7 @@ from repro.nn.unet import io_sites, unet_init
 from repro.quant.fakequant import KIND_FP_SIGNED, QuantizerParams
 from repro.serving import (DiffusionServingEngine, VirtualClock, WeightBank,
                            absmax_talora_setup, act_qps_from_plan)
+from repro.serving.obs import NULL_OBS, Observability
 from repro.serving.traffic import (MetricsCollector, Scenario, TraceWriter,
                                    get_scenario, list_scenarios, load_trace,
                                    run_scenario)
@@ -194,6 +204,17 @@ def main(argv=None) -> None:
                          "(auto: implicit on compiled TPU when it fits "
                          "VMEM; im2col in interpret mode — the golden "
                          "trace digest is pinned to its numerics)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the run's span trace here: .json = Chrome "
+                         "trace-event format (open in Perfetto / "
+                         "chrome://tracing), .jsonl = one event per line")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry's text exposition "
+                         "(Prometheus-style) here at run end")
+    ap.add_argument("--report-json", default=None,
+                    help="write a machine-readable run report (summary, "
+                         "SLO verdicts, engine stats, obs counters, "
+                         "outcome digest) here — what CI asserts on")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny everything (CI: 2 concurrent requests)")
@@ -234,12 +255,16 @@ def main(argv=None) -> None:
     elif args.act_quant == "off":
         act_qps = {}
     clock = VirtualClock() if args.replay_clock == "virtual" else None
+    obs = (Observability() if (args.trace_out or args.metrics_out
+                               or args.report_json) else NULL_OBS)
+    obs.install_kernels()
     engine = DiffusionServingEngine(cfg, sched, bank, act_qps=act_qps,
                                     max_batch=max_batch, clock=clock,
                                     policy=args.policy,
                                     max_idle_sleep=args.max_idle_sleep,
                                     prefetch=not args.no_prefetch,
-                                    async_prefetch=not args.sync_prefetch)
+                                    async_prefetch=not args.sync_prefetch,
+                                    obs=obs)
     print(f"bank ready: {bank.n_segments} routing segments, plan={args.plan}, "
           f"kernels={args.kernels} ({time.time() - t0:.1f}s)")
     print(f"workload: {scn.name} — {scn.desc} "
@@ -316,8 +341,40 @@ def main(argv=None) -> None:
                    and flat_q[k].shape[-1] % 2 == 0
                    and k not in packed_sites]
         assert not missing, f"conv sites fell back to bf16: {missing}"
-    print(f"outcome digest: {outcome_digest(results)} "
+    digest = outcome_digest(results)
+    print(f"outcome digest: {digest} "
           f"({len(results)} requests, {summary['expired']} expired)")
+
+    obs.finalize(engine, collector)
+    obs.uninstall_kernels()
+    if args.trace_out:
+        n = obs.tracer.export(args.trace_out)
+        dropped = (f" ({obs.tracer.dropped} dropped)"
+                   if obs.tracer.dropped else "")
+        print(f"trace: {n} events -> {args.trace_out}{dropped}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(obs.metrics.to_text())
+        print(f"metrics: -> {args.metrics_out}")
+    if args.report_json:
+        report = {
+            "scenario": scn.name,
+            "policy": args.policy,
+            "replay_clock": args.replay_clock,
+            "kernels": args.kernels,
+            "seed": args.seed,
+            "outcome_digest": digest,
+            "n_requests": len(results),
+            "summary": {k: v for k, v in summary.items() if k != "slo"},
+            "slo": summary["slo"],
+            "engine": s,
+            "kernel_routes": (obs.kernel_profiler.route_counts()
+                              if obs.kernel_profiler is not None else {}),
+            "obs": obs.metrics.snapshot(),
+        }
+        with open(args.report_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True, default=float)
+        print(f"report: -> {args.report_json}")
 
 
 if __name__ == "__main__":

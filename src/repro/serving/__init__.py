@@ -13,3 +13,5 @@ from repro.serving.weight_bank import (WeightBank, Segment, segments_of,
 from repro.serving.scheduler import GenRequest, RequestState, ContinuousBatcher
 from repro.serving.engine import DiffusionServingEngine, VirtualClock
 from repro.serving import traffic
+from repro.serving import obs
+from repro.serving.obs import NULL_OBS, Observability

@@ -39,6 +39,13 @@ slack-aware scheduler (EDF pressure weighted against segment-switch
 cost, with group-splitting preemption — see ``scheduler``); the engine
 feeds the scheduler's ``CostModel`` with observed forward and
 segment-build durations measured on the engine clock.
+
+Passing an enabled ``serving.obs.Observability`` turns on structured
+telemetry: request/tick/fetch/forward spans on the engine clock, per-tick
+registry samples, and propagation of the obs bundle into the scheduler
+and weight bank (their decision/build spans land in the same trace).
+With the default ``NULL_OBS`` every instrumentation point is one
+``obs.enabled`` branch — the serving path is unchanged.
 """
 from __future__ import annotations
 
@@ -53,6 +60,7 @@ from repro.diffusion.samplers import (sampler_advance, sampler_init,
 from repro.diffusion.schedule import NoiseSchedule
 from repro.nn.unet import UNetConfig, unet_apply
 from repro.quant.calibrate import QuantContext
+from repro.serving.obs import NULL_OBS, Observability
 from repro.serving.scheduler import (ContinuousBatcher, GenRequest,
                                      RequestState, bucket_of)
 from repro.serving.traffic.metrics import percentile
@@ -93,7 +101,8 @@ class DiffusionServingEngine:
                  clock: VirtualClock | None = None,
                  max_idle_sleep: float = 0.25,
                  prefetch: bool = True,
-                 async_prefetch: bool = True):
+                 async_prefetch: bool = True,
+                 obs: Observability | None = None):
         self.cfg = cfg
         self.sched = sched
         self.bank = bank
@@ -118,6 +127,22 @@ class DiffusionServingEngine:
         # compute; a VirtualClock replay must build synchronously so the
         # golden-trace digest stays deterministic.
         self.async_prefetch = async_prefetch and self._advance is None
+        # observability: the tracer follows the *engine's* clock (so a
+        # VirtualClock replay traces deterministically) and propagates to
+        # the scheduler and bank so their spans land in the same buffer.
+        self.obs = obs or NULL_OBS
+        if self.obs.enabled:
+            self.obs.bind_engine(self)
+            self.batcher.obs = self.obs
+            if self.bank.obs is NULL_OBS:
+                self.bank.obs = self.obs
+            self._h_forward = self.obs.metrics.histogram(
+                "engine_forward_seconds",
+                help="engine-clock batched-forward durations (the same "
+                     "observations the scheduler cost EWMA consumes)")
+            self._h_fetch = self.obs.metrics.histogram(
+                "bank_fetch_seconds",
+                help="engine-clock stalls fetching the tick's segment")
         self._jit: dict[tuple, Callable] = {}
         self._last_padded_rows = 0
         self._next_rid = 0
@@ -163,6 +188,13 @@ class DiffusionServingEngine:
                              jax.random.PRNGKey(seed), steps=steps, eta=eta)
         rs = RequestState(req, state, submitted_at=self._now())
         self.batcher.submit(rs)
+        if self.obs.enabled:
+            self.obs.tracer.async_begin(
+                "request", rid, cat="request",
+                args={"steps": steps, "sampler": sampler,
+                      "arrival": arrival, "deadline": deadline,
+                      "priority": priority,
+                      "cfg": guidance_scale > 0})
         for cb in self.on_submit:
             cb(rs)
         return rid
@@ -170,15 +202,30 @@ class DiffusionServingEngine:
     # -- one engine tick ---------------------------------------------------
 
     def tick(self) -> list[RequestState]:
+        obs = self.obs
+        tick_span = None
+        if obs.enabled:
+            tick_span = obs.tracer.begin(
+                "tick", cat="engine", args={"tick": self.tick_count})
         now = self._now()
-        _, expired = self.batcher.admit(now, self.tick_count)
+        admitted, expired = self.batcher.admit(now, self.tick_count)
+        if obs.enabled:
+            for rs in admitted:
+                obs.tracer.async_instant("admit", rs.req.rid, cat="request")
         for rs in expired:
             rs.finished_at = now
             self.results[rs.req.rid] = rs
             self.n_expired += 1
+            if obs.enabled:
+                obs.tracer.async_end("request", rs.req.rid, cat="request",
+                                     args={"outcome": "expired"})
             for cb in self.on_expire:
                 cb(rs)
         if not self.batcher.inflight:
+            if obs.enabled:
+                tick_span.args["idle"] = True
+                obs.tracer.end(tick_span)
+                obs.sample(self)
             for cb in self.on_tick_end:
                 cb(self)
             return []
@@ -186,6 +233,13 @@ class DiffusionServingEngine:
             lambda rs: self.bank.segment_of(sampler_needed_t(rs.state)))
         seg, members = self.batcher.select(groups, self.tick_count, now=now)
         self.batcher.current_seg = seg
+        fetch_span = None
+        if obs.enabled:
+            tick_span.args.update(
+                {"seg": seg, "members": [rs.req.rid for rs in members],
+                 "n_groups": len(groups), "policy": self.batcher.policy})
+            fetch_span = obs.tracer.begin("bank_fetch", cat="bank",
+                                          args={"seg": seg})
         t_fetch = self._now()
         misses_before = self.bank.misses
         joins_before = self.bank.build_joins
@@ -200,6 +254,13 @@ class DiffusionServingEngine:
             # EWMA would stay pinned to the first cold build forever.
             # The stall is the remaining ~half of a build on average.
             self.batcher.cost.observe_switch(2 * (self._now() - t_fetch))
+        if obs.enabled:
+            fetch_span.args["outcome"] = (
+                "miss" if self.bank.misses > misses_before
+                else "join" if self.bank.build_joins > joins_before
+                else "hit")
+            obs.tracer.end(fetch_span)
+            self._h_fetch.observe(self._now() - t_fetch)
 
         # build eval items: (rs, role, t, x (1,H,W,C), y)
         items = []
@@ -212,15 +273,28 @@ class DiffusionServingEngine:
             else:
                 items.append((rs, _PLAIN, t, x, rs.req.y))
 
+        fwd_span = None
+        if obs.enabled:
+            fwd_span = obs.tracer.begin("forward", cat="engine",
+                                        args={"items": len(items)})
         t_compute = self._now()
         n_jit_before = len(self._jit)
         eps_by_item = self._run_partitions(params, items)
-        if len(self._jit) == n_jit_before:
+        compiled = len(self._jit) > n_jit_before
+        if not compiled:
             # skip ticks that traced+compiled a new (bucket, has_y)
             # forward: seeding the EWMA with compile time would poison
             # slack estimates for many subsequent ticks
             self.batcher.cost.observe_eval(self._now() - t_compute,
                                            self._last_padded_rows)
+        if obs.enabled:
+            dt = self._now() - t_compute
+            fwd_span.args.update({"padded_rows": self._last_padded_rows,
+                                  "compiled": compiled})
+            obs.tracer.end(fwd_span)
+            # the same engine-clock observation the cost EWMA consumed
+            if not compiled:
+                self._h_forward.observe(dt)
 
         finished = []
         tick = self.tick_count
@@ -234,6 +308,9 @@ class DiffusionServingEngine:
             sampler_advance(rs.state, eps)
             rs.last_advance_tick = tick
             rs.n_evals += 1
+            if obs.enabled:
+                obs.tracer.async_instant("eval", rs.req.rid, cat="request",
+                                         args={"n_evals": rs.n_evals})
             if rs.state.done:
                 rs.x0 = rs.state.x
                 rs.finished_at = self._now()
@@ -242,6 +319,12 @@ class DiffusionServingEngine:
                 self.n_finished += 1
                 self._latencies.append(rs.latency)
                 finished.append(rs)
+                if obs.enabled:
+                    obs.tracer.async_end(
+                        "request", rs.req.rid, cat="request",
+                        args={"outcome": "complete",
+                              "n_evals": rs.n_evals,
+                              "latency_s": rs.latency})
                 for cb in self.on_complete:
                     cb(rs)
         self.tick_count += 1
@@ -255,6 +338,10 @@ class DiffusionServingEngine:
             for s in {self.bank.segment_of(sampler_needed_t(rs.state))
                       for rs in members if not rs.state.done}:
                 self.bank.prefetch(s, block=not self.async_prefetch)
+        if obs.enabled:
+            tick_span.args["finished"] = len(finished)
+            obs.tracer.end(tick_span)
+            obs.sample(self)
         for cb in self.on_tick_end:
             cb(self)
         return finished

@@ -1,0 +1,118 @@
+"""Per-route kernel profiling hooks for ``kernels/ops`` dispatch.
+
+``kernels/ops`` stays dependency-free: it exposes a module-level
+``PROFILER`` slot (``None`` by default — one global read + branch per
+dispatch) and calls ``PROFILER.call(op, route, thunk, probe=x)`` around
+the chosen route when a profiler is installed. This module provides that
+profiler, backed by the obs metrics registry and span tracer.
+
+Two recording regimes, selected per call by the ``probe`` operand:
+
+  * **Traced** (``probe`` is a jax ``Tracer`` — the op is being traced
+    into a jit program, the engine's serving path): wall-clock here
+    would measure tracing, not compute, so only the route *counter*
+    increments (labelled ``traced``) and an instant span marks the
+    dispatch decision (op, route, shapes) — once per compiled forward.
+  * **Eager** (concrete operands — benches, direct kernel calls): the
+    call is timed with ``block_until_ready`` and recorded as a duration
+    span plus a ``kernel_call_seconds`` histogram observation per
+    (op, route).
+
+The timings recorded here are the same engine-clock observations the
+scheduler's ``CostModel`` EWMA consumes at forward granularity (the
+engine mirrors its ``observe_eval``/``observe_switch`` samples into the
+registry); the per-route histograms attribute that time to kernels
+without introducing a second timing source for scheduling decisions.
+
+Route label vocabulary (must stay reconcilable with the dispatch
+booby-trap tests in ``tests/test_kernels.py``): ``pallas``,
+``interpret``, ``xla_fast``, ``ref``; conv routes carry their sub-route,
+e.g. ``interpret:im2col``, ``pallas:implicit``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+
+from repro.kernels import ops as _ops
+
+
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+class KernelProfiler:
+    """Counts + times ops-dispatch routes into an obs bundle."""
+
+    def __init__(self, obs):
+        self.obs = obs
+        self._lock = threading.Lock()
+        self._counts: dict[tuple, int] = {}     # (op, route, traced) -> n
+
+    # -- installation --------------------------------------------------------
+
+    def install(self) -> "KernelProfiler":
+        _ops.PROFILER = self
+        return self
+
+    def uninstall(self) -> None:
+        if _ops.PROFILER is self:
+            _ops.PROFILER = None
+
+    def __enter__(self) -> "KernelProfiler":
+        return self.install()
+
+    def __exit__(self, *exc):
+        self.uninstall()
+        return False
+
+    # -- the ops hook --------------------------------------------------------
+
+    def call(self, op: str, route: str, thunk, probe=None):
+        traced = _is_tracer(probe)
+        with self._lock:
+            key = (op, route, traced)
+            self._counts[key] = self._counts.get(key, 0) + 1
+        m = self.obs.metrics
+        m.counter("kernel_calls_total",
+                  help="ops dispatch decisions by route",
+                  op=op, route=route,
+                  mode="traced" if traced else "eager").inc()
+        tr = self.obs.tracer
+        if traced:
+            if tr.enabled:
+                tr.instant(f"{op}[{route}]", cat="kernel",
+                           args={"op": op, "route": route, "traced": True,
+                                 **_shape_args(probe)})
+            return thunk()
+        t0 = time.perf_counter()
+        out = thunk()
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        m.histogram("kernel_call_seconds",
+                    help="eager wall-clock per ops dispatch",
+                    op=op, route=route).observe(dt)
+        if tr.enabled:
+            sp = tr.begin(f"{op}[{route}]", cat="kernel",
+                          args={"op": op, "route": route,
+                                "wall_s": dt, **_shape_args(probe)})
+            tr.end(sp)
+        return out
+
+    # -- read side -----------------------------------------------------------
+
+    def route_counts(self) -> dict[str, int]:
+        """``{"op:route": n}`` summed over traced + eager calls."""
+        with self._lock:
+            out: dict[str, int] = {}
+            for (op, route, _traced), n in self._counts.items():
+                k = f"{op}:{route}"
+                out[k] = out.get(k, 0) + n
+            return out
+
+
+def _shape_args(probe) -> dict:
+    shape = getattr(probe, "shape", None)
+    return {"shape": list(shape)} if shape is not None else {}

@@ -52,6 +52,7 @@ from typing import Callable
 import jax.numpy as jnp
 
 from repro.diffusion.samplers import SamplerState
+from repro.serving.obs import NULL_OBS
 
 POLICIES = ("fifo", "slo")
 
@@ -191,6 +192,7 @@ class ContinuousBatcher:
         self.current_seg: int | None = None     # segment served last tick
         self.segment_warm: Callable[[int], bool] | None = None
         self.segment_building: Callable[[int], bool] | None = None
+        self.obs = NULL_OBS                     # engine propagates its obs
         self.preemptions = 0                    # members deferred by splits
         self.deadline_saves = 0                 # split-urgent reqs that met
         self._save_watch: set[int] = set()      # rids whose split is pending
@@ -273,6 +275,12 @@ class ContinuousBatcher:
                                                  r.req.rid))
             for seg, members in groups.items():
                 if oldest in members:
+                    if self.obs.enabled:
+                        self.obs.tracer.instant(
+                            "select", cat="sched",
+                            args={"policy": self.policy, "seg": seg,
+                                  "n": len(members), "starved": True,
+                                  "starved_rid": oldest.req.rid})
                     return seg, members
         if self.policy == "slo":
             return self._select_slo(groups, tick, now)
@@ -282,6 +290,10 @@ class ContinuousBatcher:
             return (-len(members), min(r.req.rid for r in members))
 
         seg, members = min(groups.items(), key=rank)
+        if self.obs.enabled:
+            self.obs.tracer.instant(
+                "select", cat="sched",
+                args={"policy": "fifo", "seg": seg, "n": len(members)})
         return seg, members
 
     # -- slo policy ----------------------------------------------------------
@@ -298,24 +310,35 @@ class ContinuousBatcher:
             return 0.5 * self.cost.switch_s
         return self.cost.switch_s
 
+    def _group_pressure(self, seg: int, members: list[RequestState],
+                        now: float) -> tuple[float, float]:
+        """(min-slack, switch-penalty) for one group — the two components
+        the slo score adds. Members whose deadline has already passed are
+        guaranteed misses: they exert no urgency (an arbitrarily negative
+        slack would otherwise monopolize selection and starve
+        still-savable groups until the backstop)."""
+        n = group_padded_rows(members)
+        sl = min((self.slack(rs, now, n) for rs in members
+                  if rs.req.deadline is not None
+                  and rs.req.deadline >= now),
+                 default=self.horizon_s)
+        return min(sl, self.horizon_s), self._switch_penalty(seg)
+
     def _select_slo(self, groups: dict[int, list[RequestState]], tick: int,
                     now: float) -> tuple[int, list[RequestState]]:
         def score(item):
             seg, members = item
-            n = group_padded_rows(members)
-            # members whose deadline has already passed are guaranteed
-            # misses: they exert no urgency (an arbitrarily negative
-            # slack would otherwise monopolize selection and starve
-            # still-savable groups until the backstop)
-            sl = min((self.slack(rs, now, n) for rs in members
-                      if rs.req.deadline is not None
-                      and rs.req.deadline >= now),
-                     default=self.horizon_s)
-            sl = min(sl, self.horizon_s)
-            return (sl + self._switch_penalty(seg), -len(members),
+            sl, penalty = self._group_pressure(seg, members, now)
+            return (sl + penalty, -len(members),
                     min(r.req.rid for r in members))
 
         seg, members = min(groups.items(), key=score)
+        if self.obs.enabled:
+            sl, penalty = self._group_pressure(seg, members, now)
+            self.obs.tracer.instant(
+                "select", cat="sched",
+                args={"policy": "slo", "seg": seg, "n": len(members),
+                      "slack_s": sl, "switch_penalty_s": penalty})
         return seg, self._maybe_split(members, tick, now)
 
     def _maybe_split(self, members: list[RequestState], tick: int,
@@ -373,6 +396,13 @@ class ContinuousBatcher:
             return members
         self.preemptions += len(deferred)
         self._save_watch.update(rs.req.rid for rs in saved)
+        if self.obs.enabled:
+            self.obs.tracer.instant(
+                "preempt", cat="sched",
+                args={"run": [rs.req.rid for rs in run],
+                      "deferred": [rs.req.rid for rs in deferred],
+                      "saved": [rs.req.rid for rs in saved],
+                      "full_rows": full_rows, "small_rows": small_rows})
         return run
 
     def retire(self, rs: RequestState) -> None:

@@ -10,7 +10,20 @@ the launcher and bench report:
   * per-tick: queue depth, in-flight count, cumulative bank hits/misses,
   * derived: sliding-window throughput / p50 / p95 / p99 / goodput /
     mean queue depth / window cache hit rate (``windows``), whole-run
-    ``summary``, and SLO pass/fail (``evaluate``).
+    ``summary``, and SLO pass/fail (``evaluate``),
+  * scheduler/bank counters: ``summary()`` folds in ``preemptions`` /
+    ``deadline_saves`` and the weight bank's ``builds`` /
+    ``build_joins`` / ``prefetch_hits`` from the attached engine (these
+    used to exist only as launcher print lines).
+
+Memory is bounded: ``events``/``ticks`` are retention-capped buffers
+(``max_events``/``max_ticks``). When a cap is hit, the oldest entries
+are *compacted* into running aggregates instead of dropped — counts,
+goodput, duration, peak queue depth and mean in-flight stay exact over
+the whole run; latency percentiles and ``windows()`` cover the retained
+window only (``summary()['compacted_events']`` says how much was folded
+away). With nothing compacted, every number is identical to the
+unbounded behavior.
 
 ``percentile`` is the single nearest-rank implementation shared with
 ``engine.stats()`` (previously duplicated ad-hoc in the launcher path).
@@ -65,12 +78,59 @@ class _Event:
     expired: bool
 
 
+class _Bounded(collections.deque):
+    """Append-compatible retention buffer: beyond ``cap`` entries, the
+    oldest is handed to ``fold`` (compacted into aggregates) before the
+    new one is appended. ``cap=None`` never compacts."""
+
+    def __init__(self, cap: int | None, fold):
+        super().__init__()
+        self._cap = cap
+        self._fold = fold
+
+    def append(self, item) -> None:
+        if self._cap is not None and len(self) >= self._cap:
+            self._fold(self.popleft())
+        super().append(item)
+
+
 class MetricsCollector:
-    def __init__(self, window_s: float = 1.0):
+    def __init__(self, window_s: float = 1.0,
+                 max_events: int | None = 200_000,
+                 max_ticks: int | None = 200_000):
         assert window_s > 0
         self.window_s = window_s
-        self.events: list[_Event] = []
-        self.ticks: list[tuple] = []   # (now, pending, inflight, hits, misses)
+        self.events: collections.deque = _Bounded(max_events,
+                                                  self._fold_event)
+        # (now, pending, inflight, hits, misses)
+        self.ticks: collections.deque = _Bounded(max_ticks, self._fold_tick)
+        self._engine = None
+        # compacted-entry aggregates (all zero until a cap is hit); kept
+        # exact so summary() totals never depend on retention
+        self._f_events = 0
+        self._f_done = 0
+        self._f_expired = 0
+        self._f_met = 0
+        self._f_min_arrival: float | None = None
+        self._f_max_finished: float | None = None
+        self._f_ticks = 0
+        self._f_inflight_sum = 0.0
+        self._f_peak_queue = 0
+
+    def _fold_event(self, e: "_Event") -> None:
+        self._f_events += 1
+        self._f_done += not e.expired
+        self._f_expired += e.expired
+        self._f_met += e.met_deadline
+        self._f_min_arrival = (e.arrival if self._f_min_arrival is None
+                               else min(self._f_min_arrival, e.arrival))
+        self._f_max_finished = (e.finished if self._f_max_finished is None
+                                else max(self._f_max_finished, e.finished))
+
+    def _fold_tick(self, t: tuple) -> None:
+        self._f_ticks += 1
+        self._f_peak_queue = max(self._f_peak_queue, t[1])
+        self._f_inflight_sum += t[2]
 
     # -- engine hooks --------------------------------------------------------
 
@@ -78,6 +138,7 @@ class MetricsCollector:
         engine.on_complete.append(self.on_complete)
         engine.on_expire.append(self.on_expire)
         engine.on_tick_end.append(self.on_tick_end)
+        self._engine = engine   # scheduler/bank counters read at summary()
         return self
 
     def on_complete(self, rs) -> None:
@@ -151,28 +212,58 @@ class MetricsCollector:
 
     def summary(self) -> dict:
         done = [e for e in self.events if not e.expired]
+        # percentiles cover the retained window; every count below folds
+        # in the compacted aggregates, so totals stay exact under caps
         lats = sorted(e.latency for e in done if e.latency is not None)
-        n_met = sum(e.met_deadline for e in self.events)
+        n_events = self._f_events + len(self.events)
+        n_done = self._f_done + len(done)
+        n_expired = self._f_expired + sum(e.expired for e in self.events)
+        n_met = self._f_met + sum(e.met_deadline for e in self.events)
         duration = 0.0
-        if self.events:
-            duration = (max(e.finished for e in self.events)
-                        - min(e.arrival for e in self.events))
+        if n_events:
+            arrivals = [e.arrival for e in self.events]
+            finishes = [e.finished for e in self.events]
+            if self._f_min_arrival is not None:
+                arrivals.append(self._f_min_arrival)
+                finishes.append(self._f_max_finished)
+            duration = max(finishes) - min(arrivals)
         duration = max(duration, 1e-9)
-        return {
-            "requests": len(done),
-            "expired": sum(e.expired for e in self.events),
-            "deadline_misses": sum(not e.met_deadline for e in self.events),
+        n_ticks = self._f_ticks + len(self.ticks)
+        out = {
+            "requests": n_done,
+            "expired": n_expired,
+            "deadline_misses": n_events - n_met,
             "duration_s": duration,
-            "throughput_rps": len(done) / duration,
+            "throughput_rps": n_done / duration,
             "goodput_rps": n_met / duration,
-            "goodput_frac": (n_met / len(self.events)
-                             if self.events else 1.0),
+            "goodput_frac": n_met / n_events if n_events else 1.0,
             "p50_s": percentile(lats, 50),
             "p95_s": percentile(lats, 95),
             "p99_s": percentile(lats, 99),
-            "peak_queue_depth": max((t[1] for t in self.ticks), default=0),
-            "mean_inflight": (sum(t[2] for t in self.ticks) / len(self.ticks)
-                              if self.ticks else 0.0),
+            "peak_queue_depth": max([self._f_peak_queue]
+                                    + [t[1] for t in self.ticks]),
+            "mean_inflight": ((self._f_inflight_sum
+                               + sum(t[2] for t in self.ticks)) / n_ticks
+                              if n_ticks else 0.0),
+            "compacted_events": self._f_events,
+            "compacted_ticks": self._f_ticks,
+        }
+        out.update(self._engine_counters())
+        return out
+
+    def _engine_counters(self) -> dict:
+        """Scheduler preemption and weight-bank build/prefetch counters
+        from the attached engine — read live at summary time (so post-run
+        ``bank.drain()`` builds are included), zeros when unattached."""
+        eng = self._engine
+        batcher = getattr(eng, "batcher", None)
+        bank = getattr(eng, "bank", None)
+        return {
+            "preemptions": getattr(batcher, "preemptions", 0),
+            "deadline_saves": getattr(batcher, "deadline_saves", 0),
+            "bank_builds": getattr(bank, "builds", 0),
+            "bank_build_joins": getattr(bank, "build_joins", 0),
+            "prefetch_hits": getattr(bank, "prefetch_hits", 0),
         }
 
     def evaluate(self, slo: SLO) -> dict:

@@ -43,6 +43,7 @@ from repro.core.msfp import QuantPlan, SiteInfo
 from repro.core.qmodule import PackedW4, pack_weight
 from repro.quant.fakequant import (KIND_FP_SIGNED, KIND_INT_AFFINE,
                                    QuantizerParams)
+from repro.serving.obs import NULL_OBS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,6 +226,12 @@ class WeightBank:
         self.build_failures = 0
         self._prefetched: set[int] = set()
         self.pack_stats: dict | None = None
+        # observability: the engine propagates its bundle here so build/
+        # prefetch spans (including those emitted from the background
+        # worker thread) land in the same trace buffer. Spans are emitted
+        # *outside* ``_lock`` — the tracer has its own lock and must
+        # never nest inside the bank's.
+        self.obs = NULL_OBS
 
     # -- segment lookup ----------------------------------------------------
 
@@ -317,6 +324,9 @@ class WeightBank:
                         max_workers=1,
                         thread_name_prefix="weight-bank-prefetch")
                 self._executor.submit(self._build_install, seg, fut)
+        if self.obs.enabled:
+            self.obs.tracer.instant("prefetch", cat="bank",
+                                    args={"seg": seg, "block": block})
         if block:
             self._build_install(seg, fut)
         return True
@@ -346,6 +356,14 @@ class WeightBank:
         """Build outside the lock, install under it, resolve the future.
         Only the thread that registered ``fut`` in ``_building`` runs
         this, so each registered build executes exactly once."""
+        span = None
+        if self.obs.enabled:
+            # may run on the prefetch worker thread: the span lands on
+            # that thread's track (tracer assigns tids per thread)
+            span = self.obs.tracer.begin(
+                "bank_build", cat="bank",
+                args={"seg": seg,
+                      "prefetch": seg in self._prefetched})
         try:
             params = self._build(self.segments[seg])
         except BaseException as e:
@@ -353,8 +371,13 @@ class WeightBank:
                 self._building.pop(seg, None)
                 self._prefetched.discard(seg)
                 self.build_failures += 1
+            if span is not None:
+                span.args["error"] = repr(e)
+                self.obs.tracer.end(span)
             fut.set_exception(e)
             raise
+        if span is not None:
+            self.obs.tracer.end(span)
         with self._lock:
             self._cache[seg] = params
             self._cache.move_to_end(seg)
