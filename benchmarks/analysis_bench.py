@@ -1,0 +1,36 @@
+"""Wall-clock for the static-analysis gate itself.
+
+The repolint CI job is budgeted at <60s total; this row keeps the lint
+pass honest as rules and the tree grow. Runs the same in-process path
+CI uses (`--all-files` discovery + every rule + baseline split) and
+reports one row: total wall seconds, with file/violation counts in the
+derived column. Deliberately jax-free — the gate must stay cheap enough
+to run on every push.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+
+def rows(log=print) -> list[dict]:
+    from tools.analysis.framework import (baseline_split, collect_files,
+                                          load_config, run_files)
+    root = os.getcwd()
+    config = load_config(root)
+    t0 = time.perf_counter()
+    files = collect_files(root, config)
+    result = run_files(files, root, config)
+    new, baselined, stale = baseline_split(result, config)
+    wall_s = time.perf_counter() - t0
+    row = {"name": "repolint_all_files_wall_s",
+           "wall_s": round(wall_s, 3),
+           "derived": {"files": result.files,
+                       "files_per_s": round(result.files / wall_s, 1),
+                       "errors": len([v for v in new
+                                      if v.severity == "error"]),
+                       "baselined": len(baselined),
+                       "stale": len(stale),
+                       "suppressed": result.suppressed}}
+    log(f"repolint_all_files_wall_s,{row['wall_s']},{row['derived']}")
+    return [row]

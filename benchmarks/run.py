@@ -15,7 +15,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: t1,t4,t5,t7,fig3,fig4,kernels,serving")
+                    help="comma list: t1,t4,t5,t7,fig3,fig4,kernels,serving,"
+                         "analysis")
     ap.add_argument("--retrain", action="store_true")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -25,11 +26,20 @@ def main() -> None:
 
     results = {}
     t0 = time.time()
-    from benchmarks.common import get_tiny_ddim
-    get_tiny_ddim(retrain=args.retrain)  # build/reuse the trained fixture
-    print(f"# fixture ready ({time.time() - t0:.0f}s)")
 
-    from benchmarks import kernel_bench, paper_tables
+    if want("analysis"):
+        from benchmarks import analysis_bench
+        print("## analysis (name,wall_s,derived)")
+        results["analysis"] = analysis_bench.rows()
+
+    # every remaining section needs the trained fixture (and jax); an
+    # `--only analysis` run must stay dependency-light and sub-minute
+    if only is None or (only - {"analysis"}):
+        from benchmarks.common import get_tiny_ddim
+        get_tiny_ddim(retrain=args.retrain)  # build/reuse trained fixture
+        print(f"# fixture ready ({time.time() - t0:.0f}s)")
+
+        from benchmarks import kernel_bench, paper_tables
 
     if want("kernels"):
         print("## kernels (name,us_per_call,derived)")

@@ -1,1 +1,4 @@
-"""Shared utilities: pytree paths, sharding hints."""
+"""Shared utilities: pytree paths, sharding hints, the wall-clock seam."""
+from repro.common.clock import wall_clock
+
+__all__ = ["wall_clock"]

@@ -16,6 +16,11 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+# repolint: disable=import-layering — TA-LoRA conditions its hub mixture
+# on the same sinusoidal timestep embedding the model consumes (paper
+# Sec. 4.2); duplicating the embedding here would let the two drift.
+# Accepted single upward edge core -> nn until the embedding moves to a
+# shared home.
 from repro.nn.embeddings import timestep_embedding
 
 

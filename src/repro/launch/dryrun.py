@@ -26,13 +26,13 @@ import argparse
 import dataclasses
 import json
 import re
-import time
 import traceback
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.common.clock import wall_clock
 from repro.configs.registry import ARCH_IDS, all_cells, get_config
 from repro.configs.shapes import SHAPES
 from repro.launch.mesh import (make_production_mesh, mesh_chip_count,
@@ -129,7 +129,7 @@ def _compile_cell(cfg, shape, mesh, *, quant: str, kv: str, big: bool,
     from repro.common.sharding import set_dp_axes
     set_dp_axes(batch_axes)  # activation hints must match input shardings
     rec: dict = {}
-    t0 = time.time()
+    t0 = wall_clock()
     with mesh_scope(mesh):
         aparams = abstract_params(cfg)
         if quant == "w4" and shape.kind != "train":
@@ -166,10 +166,10 @@ def _compile_cell(cfg, shape, mesh, *, quant: str, kv: str, big: bool,
                              out_shardings=(None, cs))
             lowered = jitted.lower(aparams, acaches, specs["token"],
                                    specs["pos"])
-        rec["lower_s"] = round(time.time() - t0, 1)
-        t1 = time.time()
+        rec["lower_s"] = round(wall_clock() - t0, 1)
+        t1 = wall_clock()
         compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t1, 1)
+        rec["compile_s"] = round(wall_clock() - t1, 1)
         try:
             rec["memory"] = _mem_dict(compiled.memory_analysis())
         except Exception as e:  # CPU backend quirks

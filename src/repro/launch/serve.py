@@ -10,12 +10,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.clock import wall_clock
 from repro.configs.registry import get_config
 from repro.launch.mesh import make_host_mesh, mesh_scope
 from repro.launch.steps import make_decode_fn, quantize_lm_for_serving
@@ -53,10 +53,10 @@ def main(argv=None) -> None:
         key = jax.random.PRNGKey(0)
         params = lm_init(key, cfg)
         if args.quant in ("w4", "w4pc"):
-            t0 = time.time()
+            t0 = wall_clock()
             params = quantize_lm_for_serving(
                 params, searched=False, per_channel=(args.quant == "w4pc"))
-            print(f"quantized to W4 ({args.quant}) in {time.time() - t0:.1f}s")
+            print(f"quantized to W4 ({args.quant}) in {wall_clock() - t0:.1f}s")
         ctx = None
         if args.act_quant == "fp4" and args.quant == "bf16":
             print("note: --act-quant fp4 with --quant bf16 quantizes "
@@ -78,15 +78,15 @@ def main(argv=None) -> None:
         dec = jax.jit(make_decode_fn(cfg, ctx=ctx))
 
         # prefill by stepping the prompt (teacher-forced decode fills caches)
-        t0 = time.time()
+        t0 = wall_clock()
         logits = None
         for i in range(args.prompt_len):
             logits, caches = dec(params, caches, prompts[:, i:i + 1],
                                  jnp.int32(i))
-        prefill_s = time.time() - t0
+        prefill_s = wall_clock() - t0
 
         out_tokens = []
-        t0 = time.time()
+        t0 = wall_clock()
         tok = jnp.argmax(logits[:, -1:], axis=-1)
         for i in range(args.gen_len):
             out_tokens.append(np.asarray(tok)[:, 0])
@@ -94,7 +94,7 @@ def main(argv=None) -> None:
                                  jnp.int32(args.prompt_len + i))
             tok = jnp.argmax(logits[:, -1:], axis=-1)
         jax.block_until_ready(logits)
-        decode_s = time.time() - t0
+        decode_s = wall_clock() - t0
         gen = np.stack(out_tokens, axis=1)
         print(f"arch={cfg.name} quant={args.quant} act={args.act_quant} "
               f"kv={args.kv}")

@@ -43,12 +43,12 @@ import argparse
 import dataclasses
 import hashlib
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.clock import wall_clock
 from repro.configs.diffusion_presets import DIFFUSION_PRESETS, tiny_ddim
 from repro.core import talora
 from repro.diffusion.schedule import make_schedule
@@ -243,7 +243,7 @@ def main(argv=None) -> None:
     tcfg = talora.TALoRAConfig(hub_size=2, rank=4, t_emb_dim=32,
                                router_hidden=16)
 
-    t0 = time.time()
+    t0 = wall_clock()
     q_params, plan, hubs, router = build_quantized(
         cfg, sched, key, plan_mode=args.plan, talora_cfg=tcfg)
     bank = WeightBank(q_params, plan, hubs, router, tcfg, args.T,
@@ -266,7 +266,7 @@ def main(argv=None) -> None:
                                     async_prefetch=not args.sync_prefetch,
                                     obs=obs)
     print(f"bank ready: {bank.n_segments} routing segments, plan={args.plan}, "
-          f"kernels={args.kernels} ({time.time() - t0:.1f}s)")
+          f"kernels={args.kernels} ({wall_clock() - t0:.1f}s)")
     print(f"workload: {scn.name} — {scn.desc} "
           f"[clock={args.replay_clock}, policy={args.policy}]")
 

@@ -44,12 +44,19 @@ from repro.serving.obs.tracer import NullTracer, Span, SpanTracer
 
 class Observability:
     def __init__(self, enabled: bool = True, *, clock=None,
-                 max_events: int = 500_000):
+                 max_events: int = 500_000, lock_factory=None):
+        # lock_factory propagates to every obs-owned lock (tracer buffer,
+        # registry + instruments, kernel profiler) — the seam
+        # tools/analysis/lockcheck.py uses to install order-tracking
+        # locks for the lock-discipline tests.
         self.enabled = enabled
-        self.tracer = (SpanTracer(clock=clock, max_events=max_events)
+        self.tracer = (SpanTracer(clock=clock, max_events=max_events,
+                                  lock_factory=lock_factory)
                        if enabled else NullTracer())
-        self.metrics = MetricsRegistry()
-        self.kernel_profiler = KernelProfiler(self) if enabled else None
+        self.metrics = MetricsRegistry(lock_factory=lock_factory)
+        self.kernel_profiler = (KernelProfiler(self,
+                                               lock_factory=lock_factory)
+                                if enabled else None)
 
     # -- wiring --------------------------------------------------------------
 

@@ -46,9 +46,11 @@ def _is_tracer(x) -> bool:
 class KernelProfiler:
     """Counts + times ops-dispatch routes into an obs bundle."""
 
-    def __init__(self, obs):
+    def __init__(self, obs, lock_factory=None):
         self.obs = obs
-        self._lock = threading.Lock()
+        # lock_factory: lockcheck instrumentation seam (see weight_bank)
+        self._lock = (lock_factory("kernel_profiler._lock")
+                      if lock_factory is not None else threading.Lock())
         self._counts: dict[tuple, int] = {}     # (op, route, traced) -> n
 
     # -- installation --------------------------------------------------------

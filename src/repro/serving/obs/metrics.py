@@ -35,9 +35,9 @@ class Counter:
 
     __slots__ = ("value", "_lock")
 
-    def __init__(self):
+    def __init__(self, lock=None):
         self.value = 0
-        self._lock = threading.Lock()
+        self._lock = lock if lock is not None else threading.Lock()
 
     def inc(self, n=1) -> None:
         with self._lock:
@@ -49,9 +49,9 @@ class Gauge:
 
     __slots__ = ("value", "_lock")
 
-    def __init__(self):
+    def __init__(self, lock=None):
         self.value = 0.0
-        self._lock = threading.Lock()
+        self._lock = lock if lock is not None else threading.Lock()
 
     def set(self, v) -> None:
         with self._lock:
@@ -64,12 +64,12 @@ class Histogram:
 
     __slots__ = ("buckets", "counts", "sum", "count", "_lock")
 
-    def __init__(self, buckets=DEFAULT_BUCKETS):
+    def __init__(self, buckets=DEFAULT_BUCKETS, lock=None):
         self.buckets = tuple(sorted(buckets))
         self.counts = [0] * (len(self.buckets) + 1)   # +inf overflow
         self.sum = 0.0
         self.count = 0
-        self._lock = threading.Lock()
+        self._lock = lock if lock is not None else threading.Lock()
 
     def observe(self, v: float) -> None:
         with self._lock:
@@ -96,10 +96,20 @@ def _label_str(labels: tuple) -> str:
 
 
 class MetricsRegistry:
-    def __init__(self):
-        self._lock = threading.Lock()
+    def __init__(self, lock_factory=None):
+        # lock_factory: lockcheck instrumentation seam — wraps the
+        # registry lock and every instrument lock it hands out, so lock-
+        # order tests see the full obs lock population (see weight_bank)
+        self._lock_factory = lock_factory
+        self._lock = (lock_factory("metrics._lock")
+                      if lock_factory is not None else threading.Lock())
         # name -> (kind, help, {labels_tuple: instrument})
         self._families: dict[str, tuple] = {}
+
+    def _inst_lock(self, name: str):
+        if self._lock_factory is None:
+            return None
+        return self._lock_factory(f"metrics.{name}")
 
     def _get(self, name: str, kind: str, help_: str, labels: dict,
              factory):
@@ -118,15 +128,18 @@ class MetricsRegistry:
             return inst
 
     def counter(self, name: str, help: str = "", **labels) -> Counter:
-        return self._get(name, "counter", help, labels, Counter)
+        return self._get(name, "counter", help, labels,
+                         lambda: Counter(lock=self._inst_lock(name)))
 
     def gauge(self, name: str, help: str = "", **labels) -> Gauge:
-        return self._get(name, "gauge", help, labels, Gauge)
+        return self._get(name, "gauge", help, labels,
+                         lambda: Gauge(lock=self._inst_lock(name)))
 
     def histogram(self, name: str, help: str = "",
                   buckets=DEFAULT_BUCKETS, **labels) -> Histogram:
         return self._get(name, "histogram", help, labels,
-                         lambda: Histogram(buckets))
+                         lambda: Histogram(buckets,
+                                           lock=self._inst_lock(name)))
 
     def set(self, name: str, value, **labels) -> None:
         """Shorthand: gauge get-or-create + set."""

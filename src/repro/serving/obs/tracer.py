@@ -58,10 +58,13 @@ class Span:
 
 
 class SpanTracer:
-    def __init__(self, clock=None, max_events: int = 500_000):
+    def __init__(self, clock=None, max_events: int = 500_000,
+                 lock_factory=None):
         self.enabled = True
         self._clock = clock or (lambda: 0.0)
-        self._lock = threading.Lock()
+        # lock_factory: lockcheck instrumentation seam (see weight_bank)
+        self._lock = (lock_factory("tracer._lock")
+                      if lock_factory is not None else threading.Lock())
         self._events: collections.deque = collections.deque()
         self.max_events = max_events
         self.dropped = 0

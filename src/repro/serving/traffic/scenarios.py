@@ -26,8 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 
+from repro.common.clock import wall_clock
 from repro.serving.traffic.generators import (ClosedLoopGenerator,
                                               RequestMix, open_loop_trace)
 from repro.serving.traffic.metrics import SLO, MetricsCollector
@@ -163,7 +163,7 @@ def run_scenario(scn: Scenario, engine, *, seed: int = 0,
     return the metrics summary + SLO verdict."""
     collector = collector or MetricsCollector()
     collector.attach(engine)
-    t0 = time.perf_counter()
+    t0 = wall_clock()
     if scn.kind == "closed":
         gen = ClosedLoopGenerator(n_users=scn.n_users,
                                   requests_per_user=scn.requests_per_user,
@@ -175,6 +175,6 @@ def run_scenario(scn: Scenario, engine, *, seed: int = 0,
         engine.run()
     out = collector.summary()
     out["scenario"] = scn.name
-    out["wall_s"] = time.perf_counter() - t0
+    out["wall_s"] = wall_clock() - t0
     out["slo"] = collector.evaluate(scn.slo)
     return out

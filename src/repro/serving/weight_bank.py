@@ -179,7 +179,8 @@ class WeightBank:
 
     def __init__(self, q_params: dict, plan: QuantPlan, hubs: dict,
                  router: dict, talora_cfg: talora.TALoRAConfig, T: int, *,
-                 max_cached: int = 4, fallback_dtype=jnp.bfloat16):
+                 max_cached: int = 4, fallback_dtype=jnp.bfloat16,
+                 lock_factory=None):
         self.q_params = q_params
         self.plan = plan
         self.hubs = hubs
@@ -206,8 +207,11 @@ class WeightBank:
         # race on all of them. Builds themselves (merge + pack jax work)
         # run outside the lock; a (seg -> Future) entry in ``_building``
         # is the single-build guarantee — any concurrent fetch joins the
-        # future instead of building again.
-        self._lock = threading.Lock()
+        # future instead of building again. ``lock_factory`` is the
+        # instrumentation seam: tools/analysis/lockcheck.py installs an
+        # order-tracking lock here to verify that discipline at test time.
+        self._lock = (lock_factory("bank._lock") if lock_factory is not None
+                      else threading.Lock())
         self._building: dict[int, Future] = {}
         self._executor: ThreadPoolExecutor | None = None
         self._cache: OrderedDict[int, dict] = OrderedDict()

@@ -26,9 +26,11 @@ def single_segment_bank():
     return WeightBank(params, plan, {}, None, None, T)
 
 
-def multi_segment_bank(max_cached=8):
+def multi_segment_bank(max_cached=8, lock_factory=None):
     """Toy TALoRA bank whose untrained router fragments [0, T) into
-    several routing segments (the suites assert >= 2)."""
+    several routing segments (the suites assert >= 2). ``lock_factory``
+    passes through to WeightBank — the lockcheck suites install
+    order-tracking locks through it."""
     key = jax.random.PRNGKey(1)
     k1, k2, k3, k4 = jax.random.split(key, 4)
     params = {"l0": {"w": jax.random.normal(k1, (8, 8))},
@@ -41,7 +43,7 @@ def multi_segment_bank(max_cached=8):
         weights), tcfg)
     router = talora.init_router(k4, len(weights), tcfg)
     return WeightBank(params, plan, hubs, router, tcfg, T,
-                      max_cached=max_cached)
+                      max_cached=max_cached, lock_factory=lock_factory)
 
 
 def mk_inflight(b, rid, *, steps=1, deadline=None, last_tick=0,

@@ -254,9 +254,16 @@ def test_obs_registry_tracks_engine_counters():
 
 
 def test_bank_spans_from_threaded_churn_reconcile():
-    bank = _multi_segment_bank()
+    # The churn runs with lockcheck's order-tracking locks installed in
+    # both the bank and the whole obs stack: beyond "no torn spans",
+    # this pins that no thread ever held bank._lock while taking a
+    # tracer/metrics lock (the deadlock precondition), not just that the
+    # deadlock didn't happen to fire.
+    from tools.analysis.lockcheck import LockMonitor, serving_discipline
+    mon = serving_discipline(LockMonitor())
+    bank = _multi_segment_bank(lock_factory=mon)
     bank.max_cached = bank.n_segments
-    obs = Observability()
+    obs = Observability(lock_factory=mon)
     bank.obs = obs
     segs = list(range(bank.n_segments))
     errs = []
@@ -292,6 +299,12 @@ def test_bank_spans_from_threaded_churn_reconcile():
     assert len(tids) >= 2
     meta = {m["tid"] for m in obs.tracer._metadata_events()}
     assert tids <= meta
+    # the instrumented locks actually saw the churn, and the order
+    # discipline held throughout
+    counts = mon.acquire_counts()
+    assert counts.get("bank._lock", 0) > 0
+    assert counts.get("tracer._lock", 0) > 0
+    mon.assert_clean()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,447 @@
+"""repolint: every rule fires on a violating fixture, every allowlist
+mechanism silences it, and the committed baseline tracks reality.
+
+Structure per rule: one minimal snippet that MUST produce exactly the
+expected violation (negative fixture — proves the rule can fire at all,
+so a rule broken into a no-op fails here, not silently in CI), one
+snippet where the violation is allowlisted inline, and clean variants
+that must NOT fire (precision — the rule earns its place only if the
+sanctioned patterns stay unflagged).
+
+The suite ends with the two repo-level gates: the committed
+``repolint.toml`` baseline must match ``--all-files`` output *exactly*
+(new debt and paid-off debt both fail), and the CLI module must exit 0
+on the tree as committed.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from tools.analysis.framework import (Config, baseline_split, collect_files,
+                                      lint_source, load_config,
+                                      parse_toml_subset, run_files,
+                                      scan_disables)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _lint(src, path, rule=None, config=None):
+    res = lint_source(textwrap.dedent(src), path, config)
+    if rule is None:
+        return res.violations
+    return [v for v in res.violations if v.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# clock-discipline
+# ---------------------------------------------------------------------------
+
+
+def test_clock_discipline_fires():
+    vs = _lint("""
+        import time
+        def admit(self):
+            return time.time()
+        """, "src/repro/serving/foo.py", "clock-discipline")
+    assert len(vs) == 1 and "time.time" in vs[0].message
+    assert vs[0].severity == "error"
+
+
+def test_clock_discipline_argless_datetime_fires():
+    vs = _lint("""
+        import datetime
+        def stamp():
+            return datetime.datetime.now()
+        """, "src/repro/serving/foo.py", "clock-discipline")
+    assert len(vs) == 1
+
+
+def test_clock_discipline_allowlisted_inline():
+    vs = _lint("""
+        import time
+        def admit(self):
+            return time.time()  # repolint: disable=clock-discipline
+        """, "src/repro/serving/foo.py", "clock-discipline")
+    assert vs == []
+
+
+def test_clock_discipline_exempts_clock_classes_and_monotonic():
+    vs = _lint("""
+        import time
+        class VirtualClock:
+            def now(self):
+                return time.time()
+        def tick(self):
+            return time.monotonic()
+        """, "src/repro/serving/engine.py", "clock-discipline")
+    assert vs == []
+
+
+def test_clock_discipline_out_of_scope_path_ignored():
+    vs = _lint("import time\nt = time.time()\n",
+               "src/repro/train/loop.py", "clock-discipline")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+
+def test_lock_discipline_fires_on_span_under_lock():
+    vs = _lint("""
+        class Bank:
+            def build(self):
+                with self._lock:
+                    self.obs.tracer.instant("bank_build")
+        """, "src/repro/serving/weight_bank.py", "lock-discipline")
+    assert len(vs) == 1 and "_lock" in vs[0].message
+
+
+def test_lock_discipline_fires_on_callback_under_lock():
+    vs = _lint("""
+        class Bank:
+            def pop(self, cb):
+                with self._lock:
+                    cb(self.item)
+        """, "src/repro/serving/weight_bank.py", "lock-discipline")
+    assert len(vs) == 1
+
+
+def test_lock_discipline_allowlisted_inline():
+    vs = _lint("""
+        class Bank:
+            def build(self):
+                with self._lock:
+                    # repolint: disable=lock-discipline
+                    self.obs.tracer.instant("bank_build")
+        """, "src/repro/serving/weight_bank.py", "lock-discipline")
+    assert vs == []
+
+
+def test_lock_discipline_allows_deferred_and_after_release():
+    vs = _lint("""
+        class Bank:
+            def build(self):
+                with self._lock:
+                    self._executor.submit(lambda: self.obs.tracer.end(sp))
+                    item = self.cache.pop()
+                self.obs.tracer.instant("bank_build")
+        """, "src/repro/serving/weight_bank.py", "lock-discipline")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# import-layering
+# ---------------------------------------------------------------------------
+
+_LAYER_CFG = Config({"layers": {"kernels": ["core", "quant"],
+                                "serving": ["kernels"]}})
+
+
+def test_import_layering_fires():
+    vs = _lint("from repro.serving.engine import DiffusionServingEngine\n",
+               "src/repro/kernels/foo.py", "import-layering", _LAYER_CFG)
+    assert len(vs) == 1 and "'serving'" in vs[0].message
+
+
+def test_import_layering_allowlisted_by_comment_block():
+    vs = _lint("""
+        # repolint: disable=import-layering — sanctioned upward edge,
+        # see the layering note in repolint.toml.
+        from repro.serving.engine import DiffusionServingEngine
+        """, "src/repro/kernels/foo.py", "import-layering", _LAYER_CFG)
+    assert vs == []
+
+
+def test_import_layering_allows_declared_edges_and_self():
+    vs = _lint("""
+        from repro.core.qmodule import pack_weight
+        from repro.quant.fakequant import QuantizerParams
+        from repro.kernels import ref
+        import numpy as np
+        """, "src/repro/kernels/foo.py", "import-layering", _LAYER_CFG)
+    assert vs == []
+
+
+def test_import_layering_sublayer_resolution():
+    cfg = Config({"layers": {"serving.obs": ["kernels"],
+                             "serving": ["kernels", "serving.obs"]}})
+    bad = _lint("from repro.serving.engine import x\n",
+                "src/repro/serving/obs/tracer.py", "import-layering", cfg)
+    assert len(bad) == 1  # obs must never grow an engine dependency
+    ok = _lint("from repro.serving.obs import NULL_OBS\n",
+               "src/repro/serving/engine.py", "import-layering", cfg)
+    assert ok == []
+
+
+# ---------------------------------------------------------------------------
+# tracer-purity
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_purity_fires_in_kernel_body():
+    vs = _lint("""
+        def _matmul_kernel(x_ref, o_ref):
+            a = x_ref[...]
+            n = int(a[0, 0])
+            o_ref[...] = a * n
+        """, "src/repro/kernels/foo.py", "tracer-purity")
+    assert len(vs) == 1 and "int()" in vs[0].message
+
+
+def test_tracer_purity_fires_in_blockspec_index_map():
+    vs = _lint("""
+        import jax.experimental.pallas as pl
+        def build(bm):
+            return pl.BlockSpec((bm, 8), lambda i, j: (int(i), j))
+        """, "src/repro/kernels/foo.py", "tracer-purity")
+    assert len(vs) == 1 and "index map" in vs[0].message
+
+
+def test_tracer_purity_allowlisted_inline():
+    vs = _lint("""
+        def _matmul_kernel(x_ref, o_ref):
+            n = int(x_ref[0, 0])  # repolint: disable=tracer-purity
+            o_ref[...] = n
+        """, "src/repro/kernels/foo.py", "tracer-purity")
+    assert vs == []
+
+
+def test_tracer_purity_ignores_host_side_int():
+    # static-shape math outside kernel bodies (conv padding etc.) and
+    # untainted values inside them stay unflagged
+    vs = _lint("""
+        def _normalize_padding(x, pad):
+            return int(pad[0]), int(x.shape[1])
+        def _conv_kernel(x_ref, o_ref, *, bn):
+            k = int(bn)
+            o_ref[...] = x_ref[...] * k
+        """, "src/repro/kernels/conv.py", "tracer-purity")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# bench-operand
+# ---------------------------------------------------------------------------
+
+
+def test_bench_operand_fires_on_closed_over_array():
+    vs = _lint("""
+        import jax
+        import jax.numpy as jnp
+        w = jnp.ones((128, 128))
+        f = jax.jit(lambda x: x @ w)
+        """, "benchmarks/foo.py", "bench-operand")
+    assert len(vs) == 1 and "'w'" in vs[0].message
+
+
+def test_bench_operand_fires_on_decorated_def():
+    vs = _lint("""
+        import jax
+        import jax.numpy as jnp
+        def bench():
+            w = jnp.ones((8, 8)).astype(jnp.bfloat16)
+            @jax.jit
+            def step(x):
+                return x @ w
+            return step
+        """, "benchmarks/foo.py", "bench-operand")
+    assert len(vs) == 1
+
+
+def test_bench_operand_allowlisted_inline():
+    vs = _lint("""
+        import jax
+        import jax.numpy as jnp
+        w = jnp.ones((8, 8))
+        f = jax.jit(lambda x: x @ w)  # repolint: disable=bench-operand
+        """, "benchmarks/foo.py", "bench-operand")
+    assert vs == []
+
+
+def test_bench_operand_allows_operands_and_scalar_config():
+    vs = _lint("""
+        import jax
+        import jax.numpy as jnp
+        w = jnp.ones((8, 8))
+        cfg = QuantizerParams(2, 1)
+        f = jax.jit(lambda x, w: (x @ w) * cfg.scale)
+        out = f(jnp.zeros((8, 8)), w)
+        """, "benchmarks/foo.py", "bench-operand")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# seeded-rng
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_rng_fires_on_global_numpy():
+    vs = _lint("""
+        import numpy as np
+        def noise(n):
+            return np.random.rand(n)
+        """, "src/repro/data/foo.py", "seeded-rng")
+    assert len(vs) == 1 and "default_rng" in vs[0].message
+
+
+def test_seeded_rng_fires_on_global_stdlib():
+    vs = _lint("""
+        import random
+        def jitter():
+            return random.random()
+        """, "src/repro/data/foo.py", "seeded-rng")
+    assert len(vs) == 1
+
+
+def test_seeded_rng_allowlisted_inline():
+    vs = _lint("""
+        import numpy as np
+        def noise(n):
+            return np.random.rand(n)  # repolint: disable=seeded-rng
+        """, "src/repro/data/foo.py", "seeded-rng")
+    assert vs == []
+
+
+def test_seeded_rng_allows_generators():
+    vs = _lint("""
+        import numpy as np
+        def noise(n, seed):
+            rng = np.random.default_rng(seed)
+            return rng.standard_normal(n)
+        """, "src/repro/data/foo.py", "seeded-rng")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# no-silent-fallback
+# ---------------------------------------------------------------------------
+
+
+def test_no_silent_fallback_fires():
+    vs = _lint("""
+        from repro.kernels import ref as _ref
+        def w4_matmul(x, p):
+            return _ref.w4_matmul(x, p)
+        """, "src/repro/kernels/ops.py", "no-silent-fallback")
+    assert len(vs) == 1 and "_dispatch" in vs[0].message
+
+
+def test_no_silent_fallback_allowlisted_inline():
+    vs = _lint("""
+        from repro.kernels import ref as _ref
+        def w4_matmul(x, p):
+            return _ref.w4_matmul(x, p)  # repolint: disable=no-silent-fallback
+        """, "src/repro/kernels/ops.py", "no-silent-fallback")
+    assert vs == []
+
+
+def test_no_silent_fallback_allows_dispatched_calls():
+    vs = _lint("""
+        from repro.kernels import ref as _ref
+        def w4_matmul(x, p):
+            return _dispatch("w4_matmul", "ref",
+                             lambda: _ref.w4_matmul(x, p), x)
+        """, "src/repro/kernels/ops.py", "no-silent-fallback")
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# framework mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_disable_file_silences_whole_module():
+    vs = _lint("""
+        # repolint: disable-file=clock-discipline
+        import time
+        a = time.time()
+        b = time.time()
+        """, "src/repro/serving/foo.py", "clock-discipline")
+    assert vs == []
+
+
+def test_scan_disables_trailing_and_block():
+    per_line, per_file = scan_disables(
+        "x = 1  # repolint: disable=rule-a\n"
+        "# repolint: disable=rule-b\n"
+        "# more justification text\n"
+        "\n"
+        "y = 2\n"
+        "# repolint: disable-file=rule-c\n")
+    assert per_line[1] == {"rule-a"}
+    assert per_line[5] == {"rule-b"}   # carried through comments + blank
+    assert per_file == {"rule-c"}
+
+
+def test_toml_subset_parser():
+    d = parse_toml_subset("""
+        # comment
+        [rules]
+        clock-discipline = "warning"
+        n = 3
+        flag = true
+        [layers]
+        "serving.obs" = ["kernels",
+                         "common"]  # multiline array
+        """)
+    assert d["rules"]["clock-discipline"] == "warning"
+    assert d["rules"]["n"] == 3 and d["rules"]["flag"] is True
+    assert d["layers"]["serving.obs"] == ["kernels", "common"]
+
+
+def test_severity_override_and_off():
+    cfg = Config({"rules": {"clock-discipline": "warning"}})
+    vs = _lint("import time\nt = time.time()\n",
+               "src/repro/serving/foo.py", "clock-discipline", cfg)
+    assert len(vs) == 1 and vs[0].severity == "warning"
+    off = Config({"rules": {"clock-discipline": "off"}})
+    assert _lint("import time\nt = time.time()\n",
+                 "src/repro/serving/foo.py", "clock-discipline", off) == []
+
+
+def test_baseline_split_detects_drift_both_ways():
+    src = "import time\nt = time.time()\n"
+    res = lint_source(src, "src/repro/serving/foo.py")
+    key = next(v for v in res.violations
+               if v.rule == "clock-discipline").key
+    # exact match: clean
+    cfg = Config({"baseline": {"entries": [key]}})
+    new, baselined, stale = baseline_split(res, cfg)
+    assert [v.key for v in baselined] == [key] and not stale
+    assert all(v.rule != "clock-discipline" for v in new)
+    # stale entry (violation fixed but ledger kept): flagged
+    cfg2 = Config({"baseline": {"entries": [key, "clock-discipline:gone.py:1"]}})
+    _, _, stale2 = baseline_split(res, cfg2)
+    assert stale2 == ["clock-discipline:gone.py:1"]
+    # new violation (not in ledger): reported
+    new3, _, _ = baseline_split(res, Config())
+    assert key in {v.key for v in new3}
+
+
+# ---------------------------------------------------------------------------
+# the repo itself is clean — committed baseline matches --all-files exactly
+# ---------------------------------------------------------------------------
+
+
+def test_committed_baseline_matches_all_files_exactly():
+    config = load_config(str(REPO_ROOT))
+    files = collect_files(str(REPO_ROOT), config)
+    assert len(files) > 50  # discovery actually found the tree
+    result = run_files(files, str(REPO_ROOT), config)
+    new, baselined, stale = baseline_split(result, config)
+    errors = [v for v in new if v.severity == "error"]
+    assert not errors, ("unbaselined repolint errors:\n"
+                        + "\n".join(v.format() for v in errors))
+    assert not stale, (f"stale baseline entries (fix landed but ledger "
+                       f"kept): {stale}")
+
+
+def test_cli_all_files_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--all-files"],
+        cwd=REPO_ROOT, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 error(s)" in proc.stdout

@@ -1,0 +1,14 @@
+"""repolint — the repo's static-analysis subsystem.
+
+Run ``python -m tools.analysis --all-files`` (CI) or ``--changed``
+(pre-push). See ``framework`` for the rule/config/baseline machinery,
+``rules`` for the rule set, ``lockcheck`` for the dynamic lock-order
+race detector, and ``README.md`` for the rule catalog.
+"""
+from tools.analysis.framework import (Config, LintResult, Rule, Violation,
+                                      all_rules, baseline_split, get_rule,
+                                      lint_source, load_config, register)
+
+__all__ = ["Config", "LintResult", "Rule", "Violation", "all_rules",
+           "baseline_split", "get_rule", "lint_source", "load_config",
+           "register"]

@@ -1,0 +1,181 @@
+"""repolint CLI.
+
+    python -m tools.analysis --all-files            # CI gate
+    python -m tools.analysis --changed              # pre-push loop
+    python -m tools.analysis --changed --base main
+    python -m tools.analysis --list-rules
+    python -m tools.analysis --all-files --write-baseline
+
+Exit status: 0 — clean (every finding baselined or suppressed, no stale
+baseline entries); 1 — unbaselined violations and/or stale baseline
+entries; 2 — usage error. Stale entries fail only ``--all-files`` runs:
+a partial ``--changed`` run can't tell "fixed" from "not scanned".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+from tools.analysis.framework import (CONFIG_PATH, all_rules, baseline_split,
+                                      changed_files, collect_files,
+                                      lint_file, load_config, run_files)
+
+
+def _find_root(start: str) -> str:
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.isdir(os.path.join(cur, ".git")) or \
+                os.path.exists(os.path.join(cur, CONFIG_PATH)):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.path.abspath(start)
+        cur = parent
+
+
+def _write_baseline(root: str, keys: list[str]) -> str:
+    """Rewrite the ``entries`` array under ``[baseline]`` in repolint.toml.
+
+    Textual splice, not a re-serialize: everything outside the entries
+    array (severities, scopes, layers, comments) is preserved verbatim.
+    Hand-written justification comments *inside* the array are replaced —
+    re-add them when re-baselining.
+    """
+    path = os.path.join(root, CONFIG_PATH)
+    block = "entries = [\n" + "".join(f'    "{k}",\n' for k in keys) + "]"
+    if not os.path.exists(path):
+        text = "[baseline]\n" + block + "\n"
+        with open(path, "w") as f:
+            f.write(text)
+        return path
+    with open(path) as f:
+        text = f.read()
+    m = re.search(r"entries\s*=\s*\[", text)
+    if m:
+        i, depth, in_str = m.end(), 1, None
+        while i < len(text) and depth:
+            ch = text[i]
+            if in_str:
+                if ch == in_str:
+                    in_str = None
+            elif ch in ("'", '"'):
+                in_str = ch
+            elif ch == "[":
+                depth += 1
+            elif ch == "]":
+                depth -= 1
+            i += 1
+        text = text[:m.start()] + block + text[i:]
+    elif "[baseline]" in text:
+        text = text.replace("[baseline]", "[baseline]\n" + block, 1)
+    else:
+        text = text.rstrip("\n") + "\n\n[baseline]\n" + block + "\n"
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="repolint: AST invariant checks for this repo")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--all-files", action="store_true",
+                      help="lint every configured .py in the repo")
+    mode.add_argument("--changed", action="store_true",
+                      help="lint modified/staged/untracked .py files")
+    mode.add_argument("--list-rules", action="store_true",
+                      help="print the rule catalog and exit")
+    ap.add_argument("--base", default="HEAD",
+                    help="diff base for --changed (default HEAD)")
+    ap.add_argument("--root", default=".", help="repo root (default: auto)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined violations too")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite [baseline] entries from this run's "
+                         "findings (use with --all-files)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("files", nargs="*",
+                    help="explicit files to lint (overrides mode)")
+    args = ap.parse_args(argv)
+
+    root = _find_root(args.root)
+    config = load_config(root)
+
+    if args.list_rules:
+        for rule in all_rules():
+            sev = config.severity_for(rule)
+            scope = ", ".join(config.scope_for(rule)) or "(everywhere)"
+            print(f"{rule.name} [{sev}]  scope: {scope}")
+            print(f"    {rule.description}")
+        return 0
+
+    t0 = time.perf_counter()
+    if args.files:
+        files = [os.path.abspath(f) for f in args.files]
+    elif args.changed:
+        try:
+            files = changed_files(root, args.base)
+        except RuntimeError as e:
+            print(f"repolint: {e}", file=sys.stderr)
+            return 2
+    elif args.all_files:
+        files = collect_files(root, config)
+    else:
+        ap.print_usage(sys.stderr)
+        print("repolint: one of --all-files / --changed / --list-rules / "
+              "explicit files is required", file=sys.stderr)
+        return 2
+
+    result = run_files(files, root, config)
+    new, baselined, stale = baseline_split(result, config)
+    if args.no_baseline:
+        new, baselined = sorted(new + baselined), []
+    # stale entries only fail full runs; a subset scan can't see every site
+    check_stale = args.all_files
+    wall_s = time.perf_counter() - t0
+
+    if args.write_baseline:
+        keys = sorted({v.key for v in new} | {v.key for v in baselined})
+        path = _write_baseline(root, keys)
+        print(f"repolint: wrote {len(keys)} baseline entries to {path}")
+        return 0
+
+    failing = [v for v in new if v.severity == "error"]
+    warnings = [v for v in new if v.severity != "error"]
+    ok = not failing and not (stale and check_stale)
+
+    if args.format == "json":
+        print(json.dumps({
+            "ok": ok,
+            "files": result.files,
+            "wall_s": round(wall_s, 3),
+            "violations": [vars(v) for v in new],
+            "baselined": [v.key for v in baselined],
+            "stale_baseline": stale if check_stale else [],
+            "suppressed": result.suppressed,
+        }, indent=2))
+        return 0 if ok else 1
+
+    for v in new:
+        print(v.format())
+    if check_stale:
+        for key in stale:
+            print(f"(baseline) stale entry '{key}': no longer fires — "
+                  "remove it from tools/analysis/repolint.toml (or run "
+                  "--write-baseline)")
+    print(f"repolint: {len(files)} files in {wall_s:.2f}s — "
+          f"{len(failing)} error(s), {len(warnings)} warning(s), "
+          f"{len(baselined)} baselined, {result.suppressed} suppressed"
+          + (f", {len(stale)} stale baseline entr"
+             f"{'y' if len(stale) == 1 else 'ies'}"
+             if check_stale and stale else ""))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

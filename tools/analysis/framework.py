@@ -1,0 +1,437 @@
+"""repolint core: AST rule framework, allowlists, config, baseline.
+
+The repo's determinism and performance guarantees rest on invariants
+that used to live only in reviewers' heads (engine-clock discipline for
+the golden-replay digest, span emission outside ``bank._lock``, runtime
+operands in benchmarks, the layer DAG). ``repolint`` machine-checks them
+per PR: each invariant is a :class:`Rule` with an AST visitor, a
+severity, and a scope; the CLI (``python -m tools.analysis``) runs them
+over the tree and gates CI.
+
+Suppression has three levels, strictest first:
+
+  * per-line — ``# repolint: disable=<rule>[,<rule>...]`` on the
+    flagged line (or a standalone comment on the line directly above);
+    use for a single sanctioned exception and say *why* next to it.
+  * per-file — ``# repolint: disable-file=<rule>`` anywhere in the
+    file; use when a whole module is out of a rule's jurisdiction.
+  * baseline — ``tools/analysis/repolint.toml`` ``[baseline]`` entries
+    (``"rule:path:line"``); the committed ledger of accepted debt. The
+    test suite asserts the baseline matches ``--all-files`` output
+    *exactly* — a fixed violation must leave the baseline, a new one
+    must not silently join it.
+
+The config file also declares per-rule severity overrides, per-rule
+path scopes, and the import-layer DAG (see ``rules.ImportLayeringRule``).
+No third-party parser: Python 3.10 has no ``tomllib``, so
+:func:`parse_toml_subset` reads the small TOML subset the config uses
+(sections, scalar values, string arrays).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+import subprocess
+
+
+# ---------------------------------------------------------------------------
+# Violations
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Violation:
+    path: str                   # repo-relative, posix separators
+    line: int
+    col: int
+    rule: str
+    message: str
+    severity: str = "error"     # "error" | "warning"
+
+    @property
+    def key(self) -> str:
+        """Baseline identity — stable across message rewording."""
+        return f"{self.rule}:{self.path}:{self.line}"
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"[{self.severity}] {self.rule}: {self.message}")
+
+
+# ---------------------------------------------------------------------------
+# Minimal TOML-subset parser (no tomllib on 3.10)
+# ---------------------------------------------------------------------------
+
+
+def _strip_comment(line: str) -> str:
+    out = []
+    in_str = None
+    for ch in line:
+        if in_str:
+            out.append(ch)
+            if ch == in_str:
+                in_str = None
+        elif ch in ("'", '"'):
+            in_str = ch
+            out.append(ch)
+        elif ch == "#":
+            break
+        else:
+            out.append(ch)
+    return "".join(out)
+
+
+def _parse_scalar(tok: str):
+    tok = tok.strip()
+    if tok.startswith('"') and tok.endswith('"') and len(tok) >= 2:
+        return tok[1:-1]
+    if tok.startswith("'") and tok.endswith("'") and len(tok) >= 2:
+        return tok[1:-1]
+    if tok in ("true", "false"):
+        return tok == "true"
+    try:
+        return int(tok)
+    except ValueError:
+        pass
+    try:
+        return float(tok)
+    except ValueError:
+        raise ValueError(f"unparseable TOML value: {tok!r}")
+
+
+def _parse_array(tok: str) -> list:
+    body = tok.strip()[1:-1]
+    items, cur, in_str, depth = [], [], None, 0
+    for ch in body:
+        if in_str:
+            cur.append(ch)
+            if ch == in_str:
+                in_str = None
+        elif ch in ("'", '"'):
+            in_str = ch
+            cur.append(ch)
+        elif ch == "[":
+            depth += 1
+            cur.append(ch)
+        elif ch == "]":
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            items.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if "".join(cur).strip():
+        items.append("".join(cur))
+    return [_parse_scalar(i) for i in items if i.strip()]
+
+
+def parse_toml_subset(text: str) -> dict:
+    """Parse the config's TOML subset: ``[section]`` tables, bare or
+    quoted keys, string/int/float/bool scalars, and (possibly multiline)
+    arrays of scalars. Raises ``ValueError`` on anything it can't read —
+    a half-understood lint config must fail loudly, not lint loosely."""
+    root: dict = {}
+    section = root
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = _strip_comment(lines[i]).strip()
+        i += 1
+        if not line:
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            name = line[1:-1].strip().strip('"').strip("'")
+            section = root.setdefault(name, {})
+            continue
+        if "=" not in line:
+            raise ValueError(f"unparseable TOML line: {line!r}")
+        key, _, val = line.partition("=")
+        key = key.strip().strip('"').strip("'")
+        val = val.strip()
+        if val.startswith("["):
+            # accumulate until brackets balance outside strings
+            while True:
+                depth, in_str = 0, None
+                for ch in val:
+                    if in_str:
+                        if ch == in_str:
+                            in_str = None
+                    elif ch in ("'", '"'):
+                        in_str = ch
+                    elif ch == "[":
+                        depth += 1
+                    elif ch == "]":
+                        depth -= 1
+                if depth == 0:
+                    break
+                if i >= len(lines):
+                    raise ValueError(f"unterminated array for key {key!r}")
+                val += " " + _strip_comment(lines[i]).strip()
+                i += 1
+            section[key] = _parse_array(val)
+        else:
+            section[key] = _parse_scalar(val)
+    return root
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+CONFIG_PATH = os.path.join("tools", "analysis", "repolint.toml")
+
+
+class Config:
+    """Parsed repolint.toml: severities, scopes, layer DAG, baseline."""
+
+    def __init__(self, data: dict | None = None):
+        data = data or {}
+        self.severities: dict = dict(data.get("rules", {}))
+        self.scopes: dict = {k: list(v)
+                             for k, v in data.get("scopes", {}).items()}
+        self.layers: dict = {k: list(v)
+                             for k, v in data.get("layers", {}).items()}
+        base = data.get("baseline", {})
+        self.baseline: list[str] = [str(e) for e in base.get("entries", [])]
+        run = data.get("run", {})
+        self.include: list[str] = list(run.get("include",
+                                               ["src", "tests", "benchmarks",
+                                                "tools", "examples"]))
+        self.exclude: list[str] = list(run.get("exclude", []))
+
+    def severity_for(self, rule) -> str:
+        return self.severities.get(rule.name, rule.severity)
+
+    def scope_for(self, rule) -> list[str]:
+        return self.scopes.get(rule.name, list(rule.default_scope))
+
+
+def load_config(root: str) -> Config:
+    path = os.path.join(root, CONFIG_PATH)
+    if not os.path.exists(path):
+        return Config()
+    with open(path) as f:
+        return Config(parse_toml_subset(f.read()))
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+
+class Rule:
+    """One machine-checked invariant.
+
+    Subclasses set ``name``/``severity``/``description``/``why`` and a
+    ``default_scope`` of path prefixes (overridable per-config), and
+    implement :meth:`check` over a parsed module.
+    """
+
+    name: str = ""
+    severity: str = "error"
+    description: str = ""
+    why: str = ""                       # the postmortem / PR this encodes
+    default_scope: tuple = ()           # path prefixes; () = everywhere
+
+    def applies_to(self, path: str, config: Config) -> bool:
+        scope = config.scope_for(self)
+        if not scope:
+            return True
+        return any(path == s or path.startswith(s) for s in scope)
+
+    def check(self, tree: ast.AST, src: str, path: str,
+              config: Config) -> list[Violation]:
+        raise NotImplementedError
+
+    def violation(self, path: str, node: ast.AST, message: str,
+                  config: Config) -> Violation:
+        return Violation(path=path, line=getattr(node, "lineno", 1),
+                         col=getattr(node, "col_offset", 0), rule=self.name,
+                         message=message,
+                         severity=config.severity_for(self))
+
+
+_REGISTRY: dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate + add to the rule registry."""
+    inst = cls()
+    assert inst.name and inst.name not in _REGISTRY, inst.name
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def all_rules() -> list[Rule]:
+    import tools.analysis.rules  # noqa: F401  — registers on import
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def get_rule(name: str) -> Rule:
+    import tools.analysis.rules  # noqa: F401
+    return _REGISTRY[name]
+
+
+# ---------------------------------------------------------------------------
+# Suppression comments
+# ---------------------------------------------------------------------------
+
+_DISABLE_RE = re.compile(
+    r"#\s*repolint:\s*disable(?P<file>-file)?\s*=\s*"
+    r"(?P<rules>[A-Za-z0-9_\-]+(?:\s*,\s*[A-Za-z0-9_\-]+)*)")
+
+
+def scan_disables(src: str) -> tuple[dict, set]:
+    """Returns (line -> set(rule), file_disabled_rules).
+
+    A trailing disable covers its own line. A *standalone* disable
+    comment (a line that is only a comment) covers the next code line,
+    carrying through any comment/blank lines in between — so a
+    multi-line justification block above the flagged statement works.
+    """
+    per_line: dict[int, set] = {}
+    per_file: set = set()
+    pending: set = set()
+    for i, line in enumerate(src.splitlines(), start=1):
+        stripped = line.strip()
+        m = _DISABLE_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group("rules").split(",")}
+            if m.group("file"):
+                per_file |= rules
+                continue
+            per_line.setdefault(i, set()).update(rules)
+            if stripped.startswith("#"):
+                pending |= rules
+                continue
+        if pending and stripped and not stripped.startswith("#"):
+            per_line.setdefault(i, set()).update(pending)
+            pending = set()
+    return per_line, per_file
+
+
+# ---------------------------------------------------------------------------
+# Running
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LintResult:
+    violations: list
+    suppressed: int = 0          # dropped by inline/file disables
+    files: int = 0
+
+
+def lint_source(src: str, path: str, config: Config | None = None,
+                rules: list[Rule] | None = None) -> LintResult:
+    """Lint one module's source. ``path`` decides which rules apply."""
+    config = config or Config()
+    rules = rules if rules is not None else all_rules()
+    path = path.replace(os.sep, "/")
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return LintResult([Violation(path=path, line=e.lineno or 1,
+                                     col=e.offset or 0, rule="parse-error",
+                                     message=f"file does not parse: {e.msg}")],
+                          files=1)
+    per_line, per_file = scan_disables(src)
+    out, suppressed = [], 0
+    for rule in rules:
+        if config.severity_for(rule) == "off":
+            continue
+        if not rule.applies_to(path, config):
+            continue
+        for v in rule.check(tree, src, path, config):
+            if v.rule in per_file or v.rule in per_line.get(v.line, ()):
+                suppressed += 1
+            else:
+                out.append(v)
+    return LintResult(sorted(out), suppressed=suppressed, files=1)
+
+
+def lint_file(path: str, root: str, config: Config,
+              rules: list[Rule] | None = None) -> LintResult:
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    return lint_source(src, rel, config, rules)
+
+
+def collect_files(root: str, config: Config) -> list[str]:
+    """Every lintable .py under the configured include roots."""
+    out = []
+    for inc in config.include:
+        base = os.path.join(root, inc)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if not d.startswith(".")
+                                 and d != "__pycache__")
+            rel_dir = os.path.relpath(dirpath, root).replace(os.sep, "/")
+            if any(rel_dir == e.rstrip("/") or
+                   rel_dir.startswith(e.rstrip("/") + "/")
+                   for e in config.exclude):
+                continue
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def changed_files(root: str, base: str = "HEAD") -> list[str]:
+    """Modified + staged + untracked .py files (the pre-push set)."""
+    names: set[str] = set()
+    for args in (["git", "diff", "--name-only", base],
+                 ["git", "diff", "--name-only", "--cached"],
+                 ["git", "ls-files", "--others", "--exclude-standard"]):
+        try:
+            res = subprocess.run(args, cwd=root, capture_output=True,
+                                 text=True, check=True)
+        except (subprocess.CalledProcessError, OSError) as e:
+            raise RuntimeError(f"--changed needs git ({e})") from e
+        names.update(n for n in res.stdout.splitlines() if n)
+    out = []
+    for n in sorted(names):
+        if not n.endswith(".py"):
+            continue
+        full = os.path.join(root, n)
+        if os.path.exists(full):
+            out.append(full)
+    return out
+
+
+def run_files(files: list[str], root: str, config: Config,
+              rules: list[Rule] | None = None) -> LintResult:
+    violations, suppressed = [], 0
+    for f in files:
+        r = lint_file(f, root, config, rules)
+        violations.extend(r.violations)
+        suppressed += r.suppressed
+    return LintResult(sorted(violations), suppressed=suppressed,
+                      files=len(files))
+
+
+def baseline_split(result: LintResult, config: Config
+                   ) -> tuple[list, list, list[str]]:
+    """(new_violations, baselined, stale_entries).
+
+    A baseline entry is ``"rule:path:line"``; stale entries (baselined
+    debt that no longer fires) fail the run too — the ledger must track
+    reality in both directions.
+    """
+    entries = set(config.baseline)
+    new, baselined = [], []
+    seen: set[str] = set()
+    for v in result.violations:
+        if v.key in entries:
+            baselined.append(v)
+            seen.add(v.key)
+        else:
+            new.append(v)
+    stale = sorted(entries - seen)
+    return new, baselined, stale

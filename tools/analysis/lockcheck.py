@@ -1,0 +1,285 @@
+"""Dynamic lock-order race detector for the serving stack.
+
+The static ``lock-discipline`` rule catches *lexical* span/callback
+calls under ``with self._lock:``; this module catches what grep can't —
+lock-order inversions that only materialize at runtime across call
+chains (bank thread holds ``bank._lock`` wanting ``tracer._lock`` while
+the engine thread holds ``tracer._lock`` wanting ``bank._lock``).
+
+Usage: a :class:`LockMonitor` is itself the ``lock_factory`` seam that
+``WeightBank``, ``SpanTracer``, ``MetricsRegistry`` and
+``KernelProfiler`` expose::
+
+    mon = serving_discipline(LockMonitor())
+    obs  = Observability(lock_factory=mon)
+    bank = WeightBank(..., lock_factory=mon)
+    ...   # run the churn workload
+    mon.assert_clean()
+
+Every lock it hands out records, per thread, the stack of names
+currently held. On each acquire it:
+
+  * adds outer->inner edges to a global order graph and DFS-checks for a
+    cycle (the classic AB/BA deadlock precondition — flagged even if the
+    interleaving that would deadlock never fired in this run);
+  * checks the edge against the *forbidden pairs* declared with
+    :meth:`LockMonitor.forbid` (e.g. "never acquire a tracer lock while
+    holding the bank lock" — the PR 7 span-outside-lock invariant);
+  * flags re-acquisition of the same (non-reentrant) lock object, which
+    with a real ``threading.Lock`` is a guaranteed self-deadlock.
+
+Violations are recorded (with both thread names and the acquiring
+stack), never raised inline — the workload runs to completion and
+``assert_clean()`` reports everything at once.
+"""
+from __future__ import annotations
+
+import threading
+import traceback
+
+
+class LockOrderError(AssertionError):
+    """Raised by assert_clean() when the monitor recorded violations."""
+
+
+class LockOrderViolation:
+    __slots__ = ("kind", "outer", "inner", "thread", "reason", "stack")
+
+    def __init__(self, kind, outer, inner, thread, reason, stack):
+        self.kind = kind        # "cycle" | "forbidden" | "self-deadlock"
+        self.outer = outer
+        self.inner = inner
+        self.thread = thread
+        self.reason = reason
+        self.stack = stack
+
+    def format(self) -> str:
+        head = (f"[{self.kind}] {self.outer} -> {self.inner} "
+                f"(thread {self.thread}): {self.reason}")
+        if self.stack:
+            head += "\n  acquired at:\n" + "".join(
+                "    " + ln for ln in self.stack)
+        return head
+
+
+class InstrumentedLock:
+    """Drop-in ``threading.Lock`` that reports acquires/releases to its
+    monitor. Multiple locks may share a name (e.g. every ``Counter`` of
+    one metric family) — ordering is tracked by *name*, deadlock-on-self
+    by object identity."""
+
+    def __init__(self, monitor: "LockMonitor", name: str):
+        self._monitor = monitor
+        self.name = name
+        self._lock = threading.Lock()
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        if not self._monitor._before_acquire(self):
+            # same-thread re-acquire: a real threading.Lock would hang
+            # forever here — fail the test loudly instead of deadlocking
+            raise LockOrderError(
+                f"self-deadlock: {self.name} re-acquired by the thread "
+                "already holding it")
+        got = (self._lock.acquire(blocking, timeout) if timeout != -1
+               else self._lock.acquire(blocking))
+        if got:
+            self._monitor._on_acquired(self)
+        return got
+
+    def release(self) -> None:
+        self._monitor._on_release(self)
+        self._lock.release()
+
+    def locked(self) -> bool:
+        return self._lock.locked()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class LockMonitor:
+    """Factory + global order graph for instrumented locks.
+
+    The monitor object is callable so it plugs straight into the
+    ``lock_factory=`` constructor seams: ``WeightBank(...,
+    lock_factory=mon)`` / ``Observability(lock_factory=mon)``.
+    """
+
+    def __init__(self, capture_stacks: bool = True):
+        self.capture_stacks = capture_stacks
+        self._meta = threading.Lock()   # guards graph/violations/counts
+        self._tls = threading.local()
+        # edge graph: outer name -> {inner name: (thread, stack)}
+        self._edges: dict[str, dict] = {}
+        self._forbidden: list[tuple] = []   # (outer_pfx, inner_pfx, reason)
+        self._violations: list[LockOrderViolation] = []
+        self._acquires: dict[str, int] = {}
+        self._max_held = 0
+
+    # -- factory seam --------------------------------------------------------
+
+    def lock(self, name: str) -> InstrumentedLock:
+        return InstrumentedLock(self, name)
+
+    __call__ = lock
+
+    # -- policy --------------------------------------------------------------
+
+    def forbid(self, outer_prefix: str, inner_prefix: str,
+               reason: str) -> "LockMonitor":
+        """Declare that no lock named ``inner_prefix*`` may ever be
+        acquired while a ``outer_prefix*`` lock is held. Empty
+        ``inner_prefix`` means *any* lock (outer is a leaf)."""
+        self._forbidden.append((outer_prefix, inner_prefix, reason))
+        return self
+
+    # -- hot path ------------------------------------------------------------
+
+    def _held(self) -> list:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = self._tls.held = []
+        return held
+
+    def _stack(self):
+        if not self.capture_stacks:
+            return ()
+        # drop the 3 innermost frames (this, _on_acquired, acquire)
+        return tuple(traceback.format_stack()[:-3][-6:])
+
+    def _before_acquire(self, lock: InstrumentedLock) -> bool:
+        """Record edges; False means same-thread re-acquire (the caller
+        raises instead of hanging on the real lock)."""
+        held = self._held()
+        tname = threading.current_thread().name
+        if any(h is lock for h in held):
+            with self._meta:
+                self._violations.append(LockOrderViolation(
+                    "self-deadlock", lock.name, lock.name, tname,
+                    "re-acquiring a non-reentrant lock already held by "
+                    "this thread", self._stack()))
+            return False
+        for outer in held:
+            if outer.name == lock.name:
+                continue  # same-name siblings carry no order information
+            self._record_edge(outer.name, lock.name, tname)
+        return True
+
+    def _on_acquired(self, lock: InstrumentedLock) -> None:
+        held = self._held()
+        held.append(lock)
+        with self._meta:
+            self._acquires[lock.name] = self._acquires.get(lock.name, 0) + 1
+            if len(held) > self._max_held:
+                self._max_held = len(held)
+
+    def _on_release(self, lock: InstrumentedLock) -> None:
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] is lock:
+                del held[i]
+                return
+
+    def _record_edge(self, outer: str, inner: str, tname: str) -> None:
+        with self._meta:
+            for o_pfx, i_pfx, reason in self._forbidden:
+                if outer.startswith(o_pfx) and inner.startswith(i_pfx):
+                    self._violations.append(LockOrderViolation(
+                        "forbidden", outer, inner, tname, reason,
+                        self._stack()))
+            inners = self._edges.setdefault(outer, {})
+            if inner in inners:
+                return  # known edge: already checked for cycles
+            inners[inner] = (tname, self._stack())
+            cycle = self._find_path(inner, outer)
+            if cycle:
+                other_thread = self._edges[cycle[0]][cycle[1]][0]
+                self._violations.append(LockOrderViolation(
+                    "cycle", outer, inner, tname,
+                    "lock-order cycle: this thread takes "
+                    f"{outer} -> {inner}, but the reverse path "
+                    f"{' -> '.join(cycle)} was taken (first by thread "
+                    f"{other_thread}) — AB/BA deadlock precondition",
+                    self._stack()))
+
+    def _find_path(self, start: str, goal: str):
+        """DFS path start -> goal in the edge graph (caller holds _meta)."""
+        stack = [(start, [start])]
+        seen = set()
+        while stack:
+            node, path = stack.pop()
+            if node == goal:
+                return path
+            if node in seen:
+                continue
+            seen.add(node)
+            for nxt in self._edges.get(node, ()):
+                stack.append((nxt, path + [nxt]))
+        return None
+
+    # -- read side -----------------------------------------------------------
+
+    def edges(self) -> set:
+        with self._meta:
+            return {(o, i) for o, inners in self._edges.items()
+                    for i in inners}
+
+    def acquire_counts(self) -> dict:
+        with self._meta:
+            return dict(self._acquires)
+
+    def violations(self) -> list:
+        with self._meta:
+            return list(self._violations)
+
+    def report(self) -> str:
+        with self._meta:
+            n_edges = sum(len(inners) for inners in self._edges.values())
+            lines = [f"lockcheck: {sum(self._acquires.values())} acquires "
+                     f"across {len(self._acquires)} locks, "
+                     f"{n_edges} order edges, max nesting "
+                     f"{self._max_held}, {len(self._violations)} "
+                     "violation(s)"]
+        for v in self.violations():
+            lines.append(v.format())
+        return "\n".join(lines)
+
+    def assert_clean(self) -> None:
+        vs = self.violations()
+        if vs:
+            raise LockOrderError(self.report())
+
+
+def serving_discipline(mon: LockMonitor) -> LockMonitor:
+    """The repo's lock-order policy for the bank + obs population.
+
+    Encodes the PR 7 invariants the static lock-discipline rule checks
+    lexically, as runtime law:
+
+      * spans/metrics/profiler updates happen strictly *after* releasing
+        ``bank._lock`` — the bank lock may never be outer to an obs lock;
+      * the tracer buffer lock and the kernel-profiler counts lock are
+        leaves: nothing is acquired under them;
+      * the metrics registry lock may create instruments but never calls
+        back into the tracer or the bank.
+    """
+    mon.forbid("bank._lock", "tracer",
+               "span emission while holding the bank lock (spans must be "
+               "emitted after release — PR 7 invariant)")
+    mon.forbid("bank._lock", "metrics",
+               "registry/instrument update while holding the bank lock")
+    mon.forbid("bank._lock", "kernel_profiler",
+               "profiler callback while holding the bank lock")
+    mon.forbid("tracer._lock", "",
+               "the tracer buffer lock is a leaf — no lock may be "
+               "acquired while holding it")
+    mon.forbid("kernel_profiler._lock", "",
+               "the profiler counts lock is a leaf")
+    mon.forbid("metrics._lock", "tracer",
+               "registry ops must not emit spans under the registry lock")
+    mon.forbid("metrics._lock", "bank._lock",
+               "the registry must never call back into the bank")
+    return mon

@@ -1,0 +1,590 @@
+"""The repolint rule set — each rule encodes one repo invariant.
+
+See ``tools/analysis/README.md`` for the catalog with the incident /
+design decision behind each rule. Rules register themselves via
+``@register``; scopes below are defaults and can be overridden in
+``repolint.toml [scopes]``.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analysis.framework import Config, Rule, Violation, register
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted(node) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _names_loaded(node) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _walk_with_ancestors(tree):
+    """Yields (node, ancestors) — ancestors outermost-first."""
+    stack: list = []
+
+    def rec(node):
+        yield node, tuple(stack)
+        stack.append(node)
+        for child in ast.iter_child_nodes(node):
+            yield from rec(child)
+        stack.pop()
+
+    yield from rec(tree)
+
+
+_SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+                ast.ClassDef)
+
+
+def _shallow_walk(node):
+    """ast.walk that does not descend into nested function/class scopes."""
+    todo = list(ast.iter_child_nodes(node))
+    while todo:
+        n = todo.pop(0)
+        yield n
+        if not isinstance(n, _SCOPE_NODES):
+            todo.extend(ast.iter_child_nodes(n))
+
+
+def _fn_params(fn) -> list[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# clock-discipline
+# ---------------------------------------------------------------------------
+
+
+@register
+class ClockDisciplineRule(Rule):
+    name = "clock-discipline"
+    severity = "error"
+    description = ("No ad-hoc wall-clock reads in the serving/launch stack "
+                   "outside clock classes.")
+    why = ("Scheduling decisions must run on the engine clock so the "
+           "golden-replay digest is reproducible under VirtualClock; "
+           "diagnostics go through repro.common.clock.wall_clock(). A stray "
+           "time.time() silently forks the time base.")
+    default_scope = ("src/repro/serving/", "src/repro/launch/")
+
+    BANNED_ALWAYS = {
+        "time.time", "time.time_ns", "time.perf_counter",
+        "time.perf_counter_ns", "time.process_time", "time.process_time_ns",
+        "time.monotonic_ns",
+    }
+    # wall clock only when called with no args (tz-aware now(tz) is still a
+    # wall read, but the argless form is the one that shows up in practice)
+    BANNED_ARGLESS = {
+        "datetime.now", "datetime.utcnow",
+        "datetime.datetime.now", "datetime.datetime.utcnow",
+        "datetime.date.today", "date.today",
+    }
+
+    def check(self, tree, src, path, config):
+        out = []
+        clock_depth = 0
+
+        def rec(node):
+            nonlocal clock_depth
+            is_clock_cls = (isinstance(node, ast.ClassDef)
+                            and "Clock" in node.name)
+            if is_clock_cls:
+                clock_depth += 1
+            if isinstance(node, ast.Call) and clock_depth == 0:
+                chain = dotted(node.func)
+                if chain in self.BANNED_ALWAYS:
+                    out.append(self.violation(
+                        path, node,
+                        f"{chain}() reads an ad-hoc wall clock; use the "
+                        "engine clock for scheduling time or "
+                        "repro.common.clock.wall_clock() for diagnostics",
+                        config))
+                elif (chain in self.BANNED_ARGLESS and not node.args
+                      and not node.keywords):
+                    out.append(self.violation(
+                        path, node,
+                        f"argless {chain}() is a wall-clock read; route "
+                        "through the engine clock or wall_clock()", config))
+            for child in ast.iter_child_nodes(node):
+                rec(child)
+            if is_clock_cls:
+                clock_depth -= 1
+
+        rec(tree)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+
+@register
+class LockDisciplineRule(Rule):
+    name = "lock-discipline"
+    severity = "error"
+    description = ("No tracer/obs/callback/engine-hook calls lexically "
+                   "inside a `with self._lock:` block.")
+    why = ("Span emission or user callbacks under bank/obs locks is how the "
+           "original bank deadlock family happened: the callee takes its "
+           "own lock (tracer buffer, registry) and the order inverts under "
+           "churn. Emit after releasing; defer via executor.submit.")
+    default_scope = ("src/repro/serving/weight_bank.py",
+                     "src/repro/serving/obs/")
+
+    FLAGGED_SEGMENTS = {"tracer", "obs", "_obs", "callbacks"}
+    FLAGGED_NAMES = {"cb", "callback", "hook"}
+
+    def check(self, tree, src, path, config):
+        out = []
+
+        def is_lock_item(item) -> bool:
+            expr = item.context_expr
+            chain = dotted(expr)
+            return bool(chain) and (chain == "_lock"
+                                    or chain.endswith("._lock"))
+
+        def rec(node, depth):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and depth > 0:
+                # nested def/lambda bodies run later (executor.submit etc.),
+                # not while the lock is held — legal deferral pattern
+                return
+            if isinstance(node, ast.With):
+                d = depth + 1 if any(is_lock_item(i)
+                                     for i in node.items) else depth
+                for item in node.items:
+                    rec(item, depth)
+                for st in node.body:
+                    rec(st, d)
+                return
+            if isinstance(node, ast.Call) and depth > 0:
+                chain = dotted(node.func)
+                segs = chain.split(".") if chain else []
+                bad = (any(s in self.FLAGGED_SEGMENTS for s in segs)
+                       or (isinstance(node.func, ast.Name)
+                           and node.func.id in self.FLAGGED_NAMES)
+                       or any(s.startswith("on_") for s in segs[1:]))
+                if bad:
+                    out.append(self.violation(
+                        path, node,
+                        f"call to '{chain or node.func.__class__.__name__}' "
+                        "while holding a _lock; emit spans / run callbacks "
+                        "after releasing the lock", config))
+            for child in ast.iter_child_nodes(node):
+                rec(child, depth)
+
+        rec(tree, 0)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# import-layering
+# ---------------------------------------------------------------------------
+
+
+@register
+class ImportLayeringRule(Rule):
+    name = "import-layering"
+    severity = "error"
+    description = ("repro.* imports must follow the layer DAG declared in "
+                   "repolint.toml [layers].")
+    why = ("kernels/ importing serving/ (or core/ importing launch/) "
+           "creates cycles that break partial reuse (e.g. using the "
+           "quantizers without the serving stack) and make obs a hidden "
+           "kernel dependency.")
+    default_scope = ("src/repro/",)
+
+    @staticmethod
+    def _layer_of_path(path: str) -> str | None:
+        if not path.startswith("src/repro/"):
+            return None
+        parts = path[len("src/repro/"):].split("/")
+        if len(parts) == 1:
+            return None  # top-level module (e.g. version.py): unlayered
+        layer = parts[0]
+        if layer == "serving" and len(parts) > 2 and parts[1] in ("obs",
+                                                                  "traffic"):
+            return f"serving.{parts[1]}"
+        return layer
+
+    @staticmethod
+    def _layer_of_module(mod: str) -> str | None:
+        parts = mod.split(".")
+        if len(parts) < 2 or parts[0] != "repro":
+            return None
+        layer = parts[1]
+        if layer == "serving" and len(parts) > 2 and parts[2] in ("obs",
+                                                                  "traffic"):
+            return f"serving.{parts[2]}"
+        return layer
+
+    def check(self, tree, src, path, config):
+        src_layer = self._layer_of_path(path)
+        if src_layer is None or src_layer not in config.layers:
+            return []
+        allowed = set(config.layers[src_layer])
+        out = []
+        for node in ast.walk(tree):
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                mods = [node.module] if node.module else []
+            for mod in mods:
+                tgt = self._layer_of_module(mod)
+                if tgt is None or tgt == src_layer:
+                    continue
+                # a sub-layer may import its own parent package only if
+                # declared; the parent importing a declared sub-layer is
+                # handled by the DAG entries themselves
+                if "*" in allowed or tgt in allowed:
+                    continue
+                out.append(self.violation(
+                    path, node,
+                    f"layer '{src_layer}' may not import layer '{tgt}' "
+                    f"(module {mod}); allowed: "
+                    f"{sorted(allowed) or 'nothing'} — see repolint.toml "
+                    "[layers]", config))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# tracer-purity
+# ---------------------------------------------------------------------------
+
+
+@register
+class TracerPurityRule(Rule):
+    name = "tracer-purity"
+    severity = "error"
+    description = ("No float()/int()/bool()/.item()/np.asarray on "
+                   "ref-derived values in Pallas kernel bodies or "
+                   "BlockSpec index maps.")
+    why = ("Concretizing a traced value inside a kernel body or index map "
+           "raises TracerConversionError at trace time — or worse, "
+           "silently bakes in a compile-time constant. Host-side int() on "
+           "static shapes (conv padding) is fine and stays unflagged.")
+    default_scope = ("src/repro/kernels/",)
+
+    CONCRETIZERS = {"float", "int", "bool", "complex"}
+    NP_CONCRETIZERS = {"np.asarray", "np.array", "numpy.asarray",
+                       "numpy.array"}
+    ATTR_CONCRETIZERS = {"item", "tolist"}
+
+    def _flag_concretizers(self, body_nodes, tainted, path, config, out,
+                           require_taint=True):
+        for node in body_nodes:
+            if not isinstance(node, ast.Call):
+                continue
+            chain = dotted(node.func)
+            arg_names = set()
+            for a in list(node.args) + [k.value for k in node.keywords]:
+                arg_names |= _names_loaded(a)
+            hit = None
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in self.CONCRETIZERS):
+                hit = f"{node.func.id}()"
+            elif chain in self.NP_CONCRETIZERS:
+                hit = f"{chain}()"
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in self.ATTR_CONCRETIZERS):
+                hit = f".{node.func.attr}()"
+                arg_names |= _names_loaded(node.func.value)
+            if hit is None:
+                continue
+            if require_taint and not (arg_names & tainted):
+                continue
+            out.append(self.violation(
+                path, node,
+                f"{hit} on a traced value inside a "
+                + ("kernel body" if require_taint else "BlockSpec index map")
+                + " concretizes it at trace time; keep index/compute math "
+                "symbolic (jnp ops, pl.program_id)", config))
+
+    @staticmethod
+    def _taint(fn) -> set:
+        tainted = {p for p in _fn_params(fn) if p.endswith("_ref")}
+        for _ in range(3):  # small fixpoint: chains like a = x_ref[...]; b = a
+            before = len(tainted)
+            for st in ast.walk(fn):
+                tgt_names: list[str] = []
+                val = None
+                if isinstance(st, ast.Assign):
+                    val = st.value
+                    for t in st.targets:
+                        if isinstance(t, ast.Name):
+                            tgt_names.append(t.id)
+                        elif isinstance(t, (ast.Tuple, ast.List)):
+                            tgt_names += [e.id for e in t.elts
+                                          if isinstance(e, ast.Name)]
+                elif isinstance(st, ast.AugAssign) and isinstance(
+                        st.target, ast.Name):
+                    val, tgt_names = st.value, [st.target.id]
+                elif isinstance(st, ast.AnnAssign) and st.value is not None \
+                        and isinstance(st.target, ast.Name):
+                    val, tgt_names = st.value, [st.target.id]
+                elif isinstance(st, ast.For) and isinstance(st.target,
+                                                            ast.Name):
+                    val, tgt_names = st.iter, [st.target.id]
+                if val is not None and (_names_loaded(val) & tainted):
+                    tainted.update(tgt_names)
+            if len(tainted) == before:
+                break
+        return tainted
+
+    def check(self, tree, src, path, config):
+        out = []
+        # kernel bodies: any function with a *_ref parameter
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and any(p.endswith("_ref") for p in _fn_params(node)):
+                tainted = self._taint(node)
+                self._flag_concretizers(ast.walk(node), tainted, path,
+                                        config, out, require_taint=True)
+        # BlockSpec index maps: everything in a lambda passed to BlockSpec
+        # derives from grid indices — concretizers are flagged untainted
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                chain = dotted(node.func)
+                if not chain or not chain.split(".")[-1] == "BlockSpec":
+                    continue
+                for a in list(node.args) + [k.value for k in node.keywords]:
+                    if isinstance(a, ast.Lambda):
+                        self._flag_concretizers(ast.walk(a.body), set(),
+                                                path, config, out,
+                                                require_taint=False)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# bench-operand
+# ---------------------------------------------------------------------------
+
+
+@register
+class BenchOperandRule(Rule):
+    name = "bench-operand"
+    severity = "error"
+    description = ("Benchmark arrays must be runtime operands of jitted "
+                   "callables, never closed over.")
+    why = ("XLA constant-folds closed-over arrays: the 'kernel' bench then "
+           "times a memcpy of a precomputed result. This exact footgun "
+           "invalidated early matmul numbers (PR 6 postmortem); every "
+           "bench now passes arrays as arguments.")
+    default_scope = ("benchmarks/",)
+
+    ARRAY_PREFIXES = ("jnp.", "np.", "numpy.", "jax.numpy.", "jax.random.")
+    ARRAY_FUNCS = {"pack_weight"}
+    JIT_CHAINS = {"jax.jit", "jit"}
+
+    @staticmethod
+    def _root_chain(func):
+        """Like dotted(), but drills through call chaining so
+        ``jnp.ones(...).astype(...)`` roots at ``jnp.ones``."""
+        node, parts = func, []
+        while True:
+            if isinstance(node, ast.Attribute):
+                parts.append(node.attr)
+                node = node.value
+            elif isinstance(node, ast.Call):
+                parts = []          # root is whatever the inner call is
+                node = node.func
+            elif isinstance(node, ast.Name):
+                parts.append(node.id)
+                return ".".join(reversed(parts))
+            else:
+                return None
+
+    def _collect_arrays(self, scope_node, inherited: set) -> set:
+        arrays = set(inherited)
+        for _ in range(2):  # catch w2 = w.astype(...) after w = jnp.ones(...)
+            for st in _shallow_walk(scope_node):
+                if not isinstance(st, ast.Assign) \
+                        or not isinstance(st.value, ast.Call):
+                    continue
+                chain = self._root_chain(st.value.func)
+                if not chain:
+                    continue
+                base = chain.split(".")[0]
+                is_arr = (chain.startswith(self.ARRAY_PREFIXES)
+                          or chain in self.ARRAY_FUNCS
+                          or base in arrays)
+                if not is_arr:
+                    continue
+                for t in st.targets:
+                    if isinstance(t, ast.Name):
+                        arrays.add(t.id)
+                    elif isinstance(t, (ast.Tuple, ast.List)):
+                        arrays.update(e.id for e in t.elts
+                                      if isinstance(e, ast.Name))
+        return arrays
+
+    @staticmethod
+    def _free_names(fn) -> set:
+        """Loads in a function/lambda body not bound locally."""
+        bound = set(_fn_params(fn))
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        loads = set()
+        for st in body:
+            for n in ast.walk(st):
+                if isinstance(n, ast.Name):
+                    if isinstance(n.ctx, ast.Store):
+                        bound.add(n.id)
+                    else:
+                        loads.add(n.id)
+                elif isinstance(n, (ast.Import, ast.ImportFrom)):
+                    for al in n.names:
+                        bound.add(al.asname or al.name.split(".")[0])
+        return loads - bound
+
+    def _jit_targets(self, scope_node):
+        """(report_node, fn_node_or_name) for each jit site in scope."""
+        local_defs = {st.name: st for st in _shallow_walk(scope_node)
+                      if isinstance(st, ast.FunctionDef)}
+        for st in _shallow_walk(scope_node):
+            if isinstance(st, ast.Call) and dotted(st.func) in self.JIT_CHAINS:
+                tgt = st.args[0] if st.args else None
+                if isinstance(tgt, ast.Lambda):
+                    yield st, tgt
+                elif isinstance(tgt, ast.Name) and tgt.id in local_defs:
+                    yield st, local_defs[tgt.id]
+        for name, fn in local_defs.items():
+            for dec in fn.decorator_list:
+                chain = dotted(dec) or dotted(getattr(dec, "func", None))
+                if chain in self.JIT_CHAINS:
+                    yield fn, fn
+
+    def _scan_scope(self, scope_node, inherited, path, config, out):
+        arrays = self._collect_arrays(scope_node, inherited)
+        for report_node, fn in self._jit_targets(scope_node):
+            closed = sorted(self._free_names(fn) & arrays)
+            if closed:
+                out.append(self.violation(
+                    path, report_node,
+                    f"jitted callable closes over array(s) {closed}; XLA "
+                    "constant-folds them — pass as runtime operands "
+                    "instead", config))
+        for st in _shallow_walk(scope_node):
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_scope(st, arrays, path, config, out)
+
+    def check(self, tree, src, path, config):
+        out: list[Violation] = []
+        self._scan_scope(tree, set(), path, config, out)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# seeded-rng
+# ---------------------------------------------------------------------------
+
+
+@register
+class SeededRngRule(Rule):
+    name = "seeded-rng"
+    severity = "error"
+    description = ("No global np.random.* / random.* state in src/; use "
+                   "np.random.default_rng(seed) (or jax.random keys).")
+    why = ("Global RNG state makes runs order-dependent: importing a module "
+           "that draws from np.random shifts every later draw, and two "
+           "tests sharing the global stream can't reproduce in isolation.")
+    default_scope = ("src/",)
+
+    NP_ALLOWED = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                  "MT19937", "Philox", "bit_generator"}
+    STDLIB_ALLOWED = {"Random", "SystemRandom"}
+
+    def check(self, tree, src, path, config):
+        out = []
+        imports_stdlib_random = any(
+            isinstance(n, ast.Import)
+            and any(a.name == "random" and (a.asname or a.name) == "random"
+                    for a in n.names)
+            for n in ast.walk(tree))
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = dotted(node.func)
+            if not chain:
+                continue
+            parts = chain.split(".")
+            if len(parts) >= 3 and parts[0] in ("np", "numpy") \
+                    and parts[1] == "random" \
+                    and parts[2] not in self.NP_ALLOWED:
+                out.append(self.violation(
+                    path, node,
+                    f"{chain}() draws from the global numpy RNG; thread an "
+                    "np.random.default_rng(seed) generator through instead",
+                    config))
+            elif imports_stdlib_random and len(parts) == 2 \
+                    and parts[0] == "random" \
+                    and parts[1] not in self.STDLIB_ALLOWED:
+                out.append(self.violation(
+                    path, node,
+                    f"{chain}() uses the global stdlib RNG; use a seeded "
+                    "random.Random(seed) instance", config))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# no-silent-fallback
+# ---------------------------------------------------------------------------
+
+
+@register
+class NoSilentFallbackRule(Rule):
+    name = "no-silent-fallback"
+    severity = "error"
+    description = ("Every ops branch routing off Pallas (_ref.* / "
+                   "xla_serve.*) must go through _dispatch (which counts "
+                   "it) or raise.")
+    why = ("A silent fallback hides route regressions: the suite stays "
+           "green while serving quietly runs the reference path at 10x "
+           "cost. _dispatch increments the per-route counter and feeds the "
+           "profiler, so a fallback is always visible in metrics.")
+    default_scope = ("src/repro/kernels/ops.py",)
+
+    FALLBACK_BASES = {"_ref", "xla_serve"}
+
+    def check(self, tree, src, path, config):
+        out = []
+        for node, ancestors in _walk_with_ancestors(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = dotted(node.func)
+            if not chain or chain.split(".")[0] not in self.FALLBACK_BASES:
+                continue
+            routed = any(
+                isinstance(a, ast.Call)
+                and (dotted(a.func) or "").split(".")[-1] == "_dispatch"
+                for a in ancestors)
+            raised = any(isinstance(a, ast.Raise) for a in ancestors)
+            if not routed and not raised:
+                out.append(self.violation(
+                    path, node,
+                    f"off-Pallas call {chain}() bypasses _dispatch — wrap "
+                    "it in the dispatch thunk so the fallback is counted, "
+                    "or raise", config))
+        return out
