@@ -1,0 +1,69 @@
+"""Gateway benchmark: mixed-model traffic through the serving gateway.
+
+Runs the two multi-model scenarios (``mixed_model``, ``per_model_slo``)
+at bench scale through a real two-model gateway — the tiny diffusion
+preset plus the smoke LM, each quantized through its own weight bank —
+under a shared ``SimClock`` so per-model goodput is machine-independent.
+Rows follow the kernel-bench conventions (name, us_per_call, derived):
+``us_per_call`` is wall time per served request; ``derived`` carries the
+per-model goodput split, the per-bank hit rates, and the cross-model
+build totals (the contention signal: two banks building on one clock).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from repro.launch.serve_diffusion import outcome_digest
+from repro.launch.serve_gateway import build_gateway
+from repro.serving.traffic import (MetricsCollector, get_scenario,
+                                   run_scenario)
+
+MODELS = ["tiny-ddim", "smollm-135m"]
+BENCH_SCENARIOS = ("mixed_model", "per_model_slo")
+
+
+def _args():
+    """The launcher-arg surface ``build_gateway`` consumes, bench-shaped."""
+    return argparse.Namespace(clock="sim", image_size=8, T=50, seed=0,
+                              bank_cap=None, policy="fifo",
+                              gateway_max_batch=4)
+
+
+def _bench_scale(scn):
+    mix = dataclasses.replace(scn.mix, steps=2, steps_jitter=1)
+    return dataclasses.replace(scn, mix=mix, n_requests=6)
+
+
+def rows(log=print) -> list[dict]:
+    out = []
+    for name in BENCH_SCENARIOS:
+        scn = _bench_scale(get_scenario(name))
+        gw, _sim = build_gateway(MODELS, _args())
+        collector = MetricsCollector()
+        t0 = time.perf_counter()
+        summary = run_scenario(scn, gw, seed=0, collector=collector)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        served = max(summary["requests"] + summary["expired"], 1)
+        gs = gw.stats()
+        goodput = {m: round(gs["per_model"][m]["summary"]["goodput_frac"], 3)
+                   for m in gw.list_models()}
+        banks = {m: gw.engine(m).bank for m in gw.list_models()}
+        for m, b in banks.items():
+            assert (b.builds + b.build_failures
+                    == b.misses + b.prefetches), f"bank mismatch: {m}"
+        derived = (
+            f"goodput {goodput}; "
+            f"{summary['expired']} expired; "
+            "banks "
+            + ", ".join(f"{m}: hit {b.hit_rate:.2f} ({b.builds} builds)"
+                        for m, b in banks.items())
+            + f"; sim duration {summary['duration_s']:.2f}s"
+            + f"; digest {outcome_digest(gw.results)}")
+        row = {"name": f"gateway_{name}",
+               "us_per_call": wall_us / served,
+               "derived": derived}
+        log(f"{row['name']},{row['us_per_call']:.0f},{derived}")
+        out.append(row)
+    return out

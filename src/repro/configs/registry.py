@@ -23,9 +23,43 @@ ARCHS = {
 ARCH_IDS = list(ARCHS)
 
 
+def _validate() -> None:
+    """Fail at import on a malformed registry (duplicate names, missing
+    config builders, shape references to unknown archs) — the gateway's
+    model registry and the dry-run cell matrix both trust these entries,
+    so a bad one must not survive to first use."""
+    seen: dict[str, str] = {}
+    for arch, mod in ARCHS.items():
+        for attr in ("full", "smoke"):
+            if not callable(getattr(mod, attr, None)):
+                raise ImportError(f"configs registry: {arch!r} module "
+                                  f"{mod.__name__} lacks a callable "
+                                  f"{attr}()")
+        name = mod.full().name
+        if name in seen:
+            raise ImportError(f"configs registry: duplicate config name "
+                              f"{name!r} ({seen[name]} vs {arch})")
+        seen[name] = arch
+    unknown = set(LONG_OK) - set(ARCHS)
+    if unknown:
+        raise ImportError(f"configs registry: LONG_OK references unknown "
+                          f"archs {sorted(unknown)}")
+    if not SHAPES:
+        raise ImportError("configs registry: SHAPES is empty")
+
+
+_validate()
+
+
 def get_config(arch: str, smoke: bool = False):
     mod = ARCHS[arch]
     return mod.smoke() if smoke else mod.full()
+
+
+def list_models() -> list[str]:
+    """Registered arch ids, sorted — the gateway registry and the
+    ``--models`` flag help text both enumerate from here."""
+    return sorted(ARCHS)
 
 
 def all_cells():

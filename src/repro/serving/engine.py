@@ -102,7 +102,12 @@ class DiffusionServingEngine:
                  max_idle_sleep: float = 0.25,
                  prefetch: bool = True,
                  async_prefetch: bool = True,
-                 obs: Observability | None = None):
+                 obs: Observability | None = None,
+                 model: str | None = None):
+        # model: identity label when hosted behind the multi-model gateway
+        # (obs gauges/spans carry it; None keeps single-model output
+        # byte-identical to the pre-gateway format)
+        self.model = model
         self.cfg = cfg
         self.sched = sched
         self.bank = bank
@@ -189,6 +194,7 @@ class DiffusionServingEngine:
         rs = RequestState(req, state, submitted_at=self._now())
         self.batcher.submit(rs)
         if self.obs.enabled:
+            self.obs.tracer.set_track(self.model)
             self.obs.tracer.async_begin(
                 "request", rid, cat="request",
                 args={"steps": steps, "sampler": sampler,
@@ -205,6 +211,7 @@ class DiffusionServingEngine:
         obs = self.obs
         tick_span = None
         if obs.enabled:
+            obs.tracer.set_track(self.model)
             tick_span = obs.tracer.begin(
                 "tick", cat="engine", args={"tick": self.tick_count})
         now = self._now()

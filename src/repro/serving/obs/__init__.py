@@ -87,26 +87,32 @@ class Observability:
         m = self.metrics
         b = engine.batcher
         bank = engine.bank
-        m.set("engine_ticks", engine.tick_count)
-        m.set("engine_forwards", engine.n_forwards)
-        m.set("engine_finished", engine.n_finished)
-        m.set("engine_expired", engine.n_expired)
-        m.set("engine_pending", len(b.pending))
-        m.set("engine_inflight", len(b.inflight))
-        m.set("engine_padded_samples", engine.n_padded_samples)
-        m.set("engine_compiled_forwards", len(engine._jit))
-        m.set("sched_preemptions", b.preemptions)
-        m.set("sched_deadline_saves", b.deadline_saves)
-        m.set("sched_cost_sample_s", b.cost.sample_s)
-        m.set("sched_cost_switch_s", b.cost.switch_s)
-        m.set("bank_hits", bank.hits)
-        m.set("bank_misses", bank.misses)
-        m.set("bank_builds", bank.builds)
-        m.set("bank_build_joins", bank.build_joins)
-        m.set("bank_build_failures", bank.build_failures)
-        m.set("bank_prefetches", bank.prefetches)
-        m.set("bank_prefetch_hits", bank.prefetch_hits)
-        m.set("bank_evictions", bank.evictions)
+        # engines hosted behind the gateway carry a model identity: their
+        # gauges become labeled series so two models never clobber one
+        # family; a standalone engine (model=None) keeps the unlabeled
+        # names byte-identical to the pre-gateway exposition
+        lab = ({"model": engine.model}
+               if getattr(engine, "model", None) else {})
+        m.set("engine_ticks", engine.tick_count, **lab)
+        m.set("engine_forwards", engine.n_forwards, **lab)
+        m.set("engine_finished", engine.n_finished, **lab)
+        m.set("engine_expired", engine.n_expired, **lab)
+        m.set("engine_pending", len(b.pending), **lab)
+        m.set("engine_inflight", len(b.inflight), **lab)
+        m.set("engine_padded_samples", engine.n_padded_samples, **lab)
+        m.set("engine_compiled_forwards", len(engine._jit), **lab)
+        m.set("sched_preemptions", b.preemptions, **lab)
+        m.set("sched_deadline_saves", b.deadline_saves, **lab)
+        m.set("sched_cost_sample_s", b.cost.sample_s, **lab)
+        m.set("sched_cost_switch_s", b.cost.switch_s, **lab)
+        m.set("bank_hits", bank.hits, **lab)
+        m.set("bank_misses", bank.misses, **lab)
+        m.set("bank_builds", bank.builds, **lab)
+        m.set("bank_build_joins", bank.build_joins, **lab)
+        m.set("bank_build_failures", bank.build_failures, **lab)
+        m.set("bank_prefetches", bank.prefetches, **lab)
+        m.set("bank_prefetch_hits", bank.prefetch_hits, **lab)
+        m.set("bank_evictions", bank.evictions, **lab)
         tr = self.tracer
         tr.counter("queue", {"pending": len(b.pending),
                              "inflight": len(b.inflight)})
@@ -121,13 +127,15 @@ class Observability:
             return
         self.sample(engine)
         m = self.metrics
+        lab = ({"model": engine.model}
+               if getattr(engine, "model", None) else {})
         for k, v in engine.stats().items():
             if isinstance(v, (int, float, bool)):
-                m.set(f"engine_{k}", float(v))
+                m.set(f"engine_{k}", float(v), **lab)
         if collector is not None:
             for k, v in collector.summary().items():
                 if isinstance(v, (int, float, bool)):
-                    m.set(f"traffic_{k}", float(v))
+                    m.set(f"traffic_{k}", float(v), **lab)
         if self.kernel_profiler is not None:
             m.set("kernel_routes", len(self.kernel_profiler.route_counts()))
         m.set("trace_events", len(self.tracer.events()))

@@ -68,9 +68,14 @@ class SpanTracer:
         self._events: collections.deque = collections.deque()
         self.max_events = max_events
         self.dropped = 0
-        self._tids: dict[int, int] = {}       # thread ident -> stable tid
-        self._tid_names: dict[int, str] = {}  # tid -> thread name
+        # track key: (thread ident, track-name override). The override
+        # (``set_track``) lets one thread emit onto several named tracks —
+        # the multi-model gateway runs every engine on the driver thread
+        # and labels each model's spans with its own track.
+        self._tids: dict[tuple, int] = {}     # (ident, track) -> stable tid
+        self._tid_names: dict[int, str] = {}  # tid -> track/thread name
         self._stacks: dict[int, list] = {}    # tid -> open-span stack
+        self._local = threading.local()
 
     def set_clock(self, clock) -> None:
         self._clock = clock
@@ -80,16 +85,29 @@ class SpanTracer:
 
     # -- internals -----------------------------------------------------------
 
+    def set_track(self, name: str | None) -> None:
+        """Name the current thread's track: events emitted by this thread
+        land on a tid labeled ``name`` until the next ``set_track``
+        (``None`` restores the plain thread track). Tids still assign in
+        first-emission order; the call is a thread-local write, so it is
+        cheap enough for once-per-tick use and safe from any thread."""
+        if not self.enabled:
+            return
+        self._local.track = name
+
     def _tid(self) -> int:
-        ident = threading.get_ident()
-        tid = self._tids.get(ident)
+        track = getattr(self._local, "track", None)
+        key = (threading.get_ident(), track)
+        tid = self._tids.get(key)
         if tid is None:
             with self._lock:
-                tid = self._tids.get(ident)
+                tid = self._tids.get(key)
                 if tid is None:
                     tid = len(self._tids)
-                    self._tids[ident] = tid
-                    self._tid_names[tid] = threading.current_thread().name
+                    self._tids[key] = tid
+                    self._tid_names[tid] = (
+                        track if track is not None
+                        else threading.current_thread().name)
         return tid
 
     def _emit(self, ev: dict) -> None:

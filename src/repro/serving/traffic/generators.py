@@ -47,6 +47,13 @@ class RequestMix:
     seed0: int = 0                  # request i samples with seed0 + i
     deadline_s: tuple = (None,)     # latency budgets (s), cycled; None = no SLO
     priorities: tuple = (0,)        # cycled
+    models: tuple = (None,)         # gateway routing targets, cycled;
+    #                                 None = the surface's default model.
+    #                                 Align the cycle length with
+    #                                 deadline_s to express per-model SLOs
+    #                                 (e.g. models=(a, b) with
+    #                                 deadline_s=(1.5, None) gives model a
+    #                                 a deadline and b none).
 
     def make(self, i: int, arrival: float, *, user: int | None = None,
              parent: int | None = None,
@@ -59,6 +66,7 @@ class RequestMix:
             sampler=self.samplers[i % len(self.samplers)],
             deadline=None if budget is None else float(arrival) + budget,
             priority=self.priorities[i % len(self.priorities)],
+            model=self.models[i % len(self.models)],
             user=user, parent=parent, think_s=think_s)
 
 
@@ -167,28 +175,34 @@ class ClosedLoopGenerator:
         rid_user: dict[int, int] = {}
         issued: list[TraceRequest] = []
 
+        routes = getattr(engine, "routes_models", False)
+
         def issue(user: int, arrival: float, parent: int | None = None,
                   think_s: float | None = None) -> None:
             k = counts[user]
             counts[user] += 1
             tr = self.mix.make(user * self.requests_per_user + k, arrival,
                                user=user, parent=parent, think_s=think_s)
+            kw = {"model": tr.model} if routes else {}
             rid = engine.submit(steps=tr.steps, eta=tr.eta, seed=tr.seed,
                                 sampler=tr.sampler, y=tr.y,
                                 guidance_scale=tr.guidance_scale,
                                 arrival=tr.arrival, deadline=tr.deadline,
                                 priority=tr.priority, user=user,
-                                parent=parent, think_s=think_s)
+                                parent=parent, think_s=think_s, **kw)
             rid_user[rid] = user
             issued.append(dataclasses.replace(tr, rid=rid))
 
         def on_done(rs) -> None:
-            user = rid_user.get(rs.req.rid)
+            # a gateway annotates rs.gid (its surface-level rid — what
+            # submit() returned); plain engines complete with req.rid
+            rid = getattr(rs, "gid", rs.req.rid)
+            user = rid_user.get(rid)
             if user is None or counts[user] >= self.requests_per_user:
                 return
             think = float(rngs[user].exponential(self.think_mean_s))
             issue(user, float(rs.finished_at) + think,
-                  parent=rs.req.rid, think_s=think)
+                  parent=rid, think_s=think)
 
         engine.on_complete.append(on_done)
         engine.on_expire.append(on_done)

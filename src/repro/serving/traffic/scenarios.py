@@ -21,6 +21,12 @@ Registry (see ``SCENARIOS``):
     aware group selection can. The fifo-vs-slo policy discriminator
     (largest-group-wins demonstrably misses the tight tier).
   * ``golden``       — replay of the checked-in CI fixture trace.
+  * ``mixed_model``  — two gateway models interleaved 1:1 over Poisson;
+    the cross-model capacity-contention scenario (run against a
+    ``ServingGateway``; a plain engine serves everything itself).
+  * ``per_model_slo`` — the same two-model interleave where only the
+    diffusion model's requests carry deadlines: goodput is judged
+    per model, not per fleet.
 """
 from __future__ import annotations
 
@@ -131,6 +137,28 @@ register(Scenario(
     name="golden", kind="trace", trace_path=GOLDEN_TRACE,
     desc="Checked-in CI fixture trace; deterministic replay smoke.",
     max_batch=2, slo=SLO()))
+
+# Multi-model gateway scenarios. Model names are routing keys the run's
+# submission surface resolves (the gateway registry's defaults pair the
+# tiny diffusion preset with the smollm smoke LM); a surface without
+# routing (plain engine) ignores them and serves every request itself.
+register(Scenario(
+    name="mixed_model", kind="open", gen="poisson", gen_kw=(("rate", 20.0),),
+    desc="Two models interleaved 1:1 over Poisson arrivals; the gateway "
+         "cross-model contention baseline.",
+    mix=RequestMix(samplers=("ddim",), steps=6, steps_jitter=1,
+                   models=("tiny-ddim", "smollm-135m")),
+    slo=SLO(p95_s=120.0)))
+
+register(Scenario(
+    name="per_model_slo", kind="open", gen="poisson",
+    gen_kw=(("rate", 25.0),),
+    desc="Two models 1:1 where only the diffusion requests carry "
+         "deadlines — per-model goodput under cross-model contention.",
+    mix=RequestMix(samplers=("ddim",), steps=6, steps_jitter=1,
+                   models=("tiny-ddim", "smollm-135m"),
+                   deadline_s=(1.5, None)),
+    slo=SLO(goodput_min=0.25)))
 
 
 def resolve_trace_path(path: str) -> str:

@@ -30,14 +30,19 @@ class SimClock:
         self.tick_base_s = tick_base_s
         self.sample_s = sample_s
         self.t = 0.0
-        self._fwd_seen = 0
+        # forward counters are tracked per attached engine: one SimClock
+        # serves every engine behind a multi-model gateway, and engine A's
+        # forwards must not mask engine B's idle ticks
+        self._fwd_seen: dict[int, int] = {}
 
     def now(self) -> float:
         return self.t
 
     def attach(self, engine) -> "SimClock":
         """Wire the clock into an engine built with ``now_fn=clock.now``
-        (and ``max_idle_sleep=0.0`` so idle waits spin through ticks)."""
+        (and ``max_idle_sleep=0.0`` so idle waits spin through ticks).
+        Attach every engine sharing the simulation to the same instance —
+        simulated time is then one global axis their ticks interleave on."""
         engine.async_prefetch = False    # thread timing must not leak in
 
         def charge_forward(e, padded_rows):
@@ -46,9 +51,9 @@ class SimClock:
         engine.on_forward.append(charge_forward)
 
         def idle_advance(e):
-            if e.n_forwards == self._fwd_seen:   # tick ran no forward
+            if e.n_forwards == self._fwd_seen.get(id(e), 0):  # no forward
                 self.t += self.tick_base_s
-            self._fwd_seen = e.n_forwards
+            self._fwd_seen[id(e)] = e.n_forwards
 
         engine.on_tick_end.append(idle_advance)
         engine.batcher.cost.sample_s = self.sample_s

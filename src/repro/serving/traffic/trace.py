@@ -18,6 +18,15 @@ against and past which the scheduler refuses admission. ``user`` /
 ``parent`` / ``think_s`` are the think-time links a closed-loop
 generator leaves behind: request ``rid`` was issued ``think_s`` seconds
 after request ``parent`` of session ``user`` completed.
+
+Version history:
+
+  * v1 — original schema (single-model engines).
+  * v2 — adds the optional ``model`` field: the registered model name a
+    multi-model gateway routes the request to. Absent/None means "the
+    default model" — a v1 file therefore loads unchanged (every request
+    gets the default), and a v2 file whose requests never set ``model``
+    is line-identical to the v1 encoding apart from the header.
 """
 from __future__ import annotations
 
@@ -29,7 +38,8 @@ import os
 from repro.diffusion.samplers import STEP_SAMPLERS
 
 FORMAT = "repro.traffic.trace"
-VERSION = 1
+VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +59,8 @@ class TraceRequest:
     parent: int | None = None       # rid whose completion triggered this one
     think_s: float | None = None    # think time preceding this request
     rid: int | None = None          # assigned on load / capture
+    model: str | None = None        # gateway routing target (v2); None =
+    #                                 the submission surface's default model
 
     def to_obj(self) -> dict:
         return {k: v for k, v in dataclasses.asdict(self).items()
@@ -89,6 +101,10 @@ def validate_trace(reqs: list[TraceRequest]) -> None:
                              f"arrival {tr.arrival}")
         if not isinstance(tr.priority, int):
             raise ValueError(f"{where}: priority must be an int")
+        if tr.model is not None and (not isinstance(tr.model, str)
+                                     or not tr.model):
+            raise ValueError(f"{where}: model must be a non-empty string "
+                             f"or absent, got {tr.model!r}")
 
 
 def save_trace(path: str, reqs: list[TraceRequest],
@@ -113,9 +129,10 @@ def load_trace(path: str, *, validate: bool = True
     if header.get("format") != FORMAT:
         raise ValueError(f"{path}: not a {FORMAT} file "
                          f"(header {header.get('format')!r})")
-    if header.get("version") != VERSION:
+    if header.get("version") not in _READABLE_VERSIONS:
         raise ValueError(f"{path}: unsupported trace version "
-                         f"{header.get('version')!r} (expected {VERSION})")
+                         f"{header.get('version')!r} "
+                         f"(readable: {_READABLE_VERSIONS})")
     reqs = [request_from_obj(json.loads(ln)) for ln in lines[1:]]
     reqs.sort(key=lambda tr: (tr.arrival,
                               tr.rid if tr.rid is not None else 0))
@@ -137,15 +154,23 @@ def load_trace(path: str, *, validate: bool = True
 
 
 def submit_trace(engine, reqs: list[TraceRequest]) -> dict[int, int]:
-    """Submit every trace request to the engine; {trace rid: engine rid}."""
+    """Submit every trace request to the engine; {trace rid: engine rid}.
+
+    A routing surface (the multi-model gateway) advertises
+    ``routes_models = True`` and receives each request's ``model`` field;
+    a plain single-model engine never sees the kwarg, so v1 replay
+    behavior — and its golden digest — is untouched.
+    """
+    routes = getattr(engine, "routes_models", False)
     mapping = {}
     for tr in sorted(reqs, key=lambda t: (t.arrival, t.rid or 0)):
+        kw = {"model": tr.model} if routes else {}
         rid = engine.submit(steps=tr.steps, eta=tr.eta, seed=tr.seed,
                             sampler=tr.sampler, y=tr.y,
                             guidance_scale=tr.guidance_scale,
                             arrival=tr.arrival, deadline=tr.deadline,
                             priority=tr.priority, user=tr.user,
-                            parent=tr.parent, think_s=tr.think_s)
+                            parent=tr.parent, think_s=tr.think_s, **kw)
         mapping[tr.rid if tr.rid is not None else rid] = rid
     return mapping
 
@@ -179,12 +204,17 @@ class TraceWriter:
 
     def _on_submit(self, rs) -> None:
         req = rs.req
+        # ``rs.model`` / ``rs.gid`` are the gateway's routing annotations
+        # (set before the engine's on_submit hooks fire). The gateway-wide
+        # gid replaces the engine-local rid in the capture — two engines
+        # both count rids from 0, so raw rids would collide in one file.
         self.record(TraceRequest(
             arrival=req.arrival, steps=req.steps, eta=req.eta,
             seed=req.seed, sampler=req.sampler, y=req.y,
             guidance_scale=req.guidance_scale, deadline=req.deadline,
             priority=req.priority, user=req.user, parent=req.parent,
-            think_s=req.think_s, rid=req.rid))
+            think_s=req.think_s, rid=getattr(rs, "gid", req.rid),
+            model=getattr(rs, "model", None)))
 
     def close(self) -> None:
         if not self._f.closed:

@@ -177,12 +177,20 @@ def act_qps_from_plan(plan: QuantPlan | None) -> dict[str, QuantizerParams]:
 class WeightBank:
     """LRU cache of per-segment TALoRA-merged, FP4-packed weight sets."""
 
-    def __init__(self, q_params: dict, plan: QuantPlan, hubs: dict,
+    def __init__(self, q_params: dict, plan: QuantPlan | None, hubs: dict,
                  router: dict, talora_cfg: talora.TALoRAConfig, T: int, *,
                  max_cached: int = 4, fallback_dtype=jnp.bfloat16,
-                 lock_factory=None):
+                 lock_factory=None, build_fn=None):
         self.q_params = q_params
         self.plan = plan
+        # build_fn: alternative packer ``params -> packed tree`` replacing
+        # the plan-driven ``pack_param_tree`` — the seam non-diffusion
+        # engines (the gateway's LM adapter) use to reuse the bank's LRU /
+        # single-build / counter machinery with their own quant recipe.
+        # TALoRA merging still runs first when hubs are present.
+        self.build_fn = build_fn
+        if plan is None and build_fn is None:
+            raise ValueError("WeightBank needs a QuantPlan or a build_fn")
         self.hubs = hubs
         self.router = router
         self.talora_cfg = talora_cfg
@@ -406,8 +414,15 @@ class WeightBank:
                     for i, name in enumerate(self.names)}
             params = talora.merge_into_tree(params, self.hubs, sels,
                                             self.talora_cfg)
-        packed, stats = pack_param_tree(params, self.plan,
-                                        fallback_dtype=self.fallback_dtype)
+        if self.build_fn is not None:
+            packed = self.build_fn(params)
+            flat = flatten_paths(packed)
+            stats = {"packed": [k for k, v in flat.items()
+                                if isinstance(v, PackedW4)],
+                     "fallback": []}
+        else:
+            packed, stats = pack_param_tree(
+                params, self.plan, fallback_dtype=self.fallback_dtype)
         if self.pack_stats is None:
             self.pack_stats = stats
         return packed

@@ -1,0 +1,377 @@
+"""Multi-model serving gateway: registry validation, routing, hook
+fan-in, determinism, LM adapter, and trace v2 back-compat.
+
+Gateway-hosted engines here are mostly stubs (``apply_fn`` short-circuits
+the UNet) — the packed-path numerics live in test_serving, and the
+full-stack gateway digest checks live in CI via ``launch.serve_gateway``.
+What this suite pins is the routing/identity layer: gid assignment,
+``rs.model``/``rs.gid`` annotations, per-bank counter reconciliation,
+deterministic two-model replay, and v1 traces loading unchanged.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.tree import flatten_paths
+from repro.configs.diffusion_presets import tiny_ddim
+from repro.configs.registry import list_models
+from repro.diffusion.schedule import make_schedule
+from repro.launch.serve_diffusion import outcome_digest
+from repro.models.lm import LMConfig, lm_init
+from repro.serving import (DiffusionServingEngine, VirtualClock, WeightBank,
+                           default_serving_plan)
+from repro.serving.gateway import (FAMILIES, DecodeState, LMServingEngine,
+                                   ModelEntry, ModelRegistry, ServingGateway,
+                                   default_entries, default_registry)
+from repro.serving.traffic import (MetricsCollector, RequestMix, TraceWriter,
+                                   get_scenario, list_scenarios, load_trace,
+                                   open_loop_trace, run_scenario, save_trace,
+                                   submit_trace)
+from repro.serving.traffic.scenarios import build_trace, resolve_trace_path
+from repro.serving.traffic.sim import SimClock
+
+T = 40
+GOLDEN = "tests/data/golden_trace.jsonl"
+
+
+def _bank():
+    params = {"l0": {"w": jnp.ones((4, 4))}}
+    plan = default_serving_plan(flatten_paths(params))
+    return WeightBank(params, plan, {}, None, None, T)
+
+
+def _stub_engine(max_batch=3, scale=0.1, **kw):
+    sched = make_schedule("linear", T)
+    return DiffusionServingEngine(
+        tiny_ddim(4), sched, _bank(), max_batch=max_batch,
+        apply_fn=lambda params, x, tb, y, ctx, s=scale: s * x, **kw)
+
+
+def _two_model_gateway(clock=None, **eng_kw):
+    """Both default registry names hosted on stub engines (distinct
+    apply scales so cross-routing would change outputs)."""
+    gw = ServingGateway(clock=clock)
+    entries = {e.name: e for e in default_entries()}
+    kw = dict(eng_kw)
+    if clock is not None:
+        kw["clock"] = clock
+    gw.add_model(entries["tiny-ddim"],
+                 _stub_engine(max_batch=2, scale=0.1, **kw))
+    gw.add_model(entries["smollm-135m"],
+                 _stub_engine(max_batch=2, scale=0.3, **kw))
+    return gw
+
+
+# ---------------------------------------------------------------------------
+# Registry validation.
+# ---------------------------------------------------------------------------
+
+
+def test_model_entry_validation():
+    ok = ModelEntry(name="tiny-ddim", family="diffusion", config="tiny-ddim")
+    ok.validate()
+    with pytest.raises(ValueError, match="family"):
+        ModelEntry(name="x", family="vision", config="tiny-ddim").validate()
+    with pytest.raises(ValueError, match="preset"):
+        ModelEntry(name="x", family="diffusion", config="nope").validate()
+    with pytest.raises(ValueError, match="arch"):
+        ModelEntry(name="x", family="lm", config="nope").validate()
+    with pytest.raises(ValueError, match="name"):
+        ModelEntry(name="", family="diffusion", config="tiny-ddim").validate()
+    with pytest.raises(ValueError, match="bank_cap"):
+        ModelEntry(name="x", family="diffusion", config="tiny-ddim",
+                   bank_cap=0).validate()
+    assert set(FAMILIES) == {"diffusion", "lm"}
+
+
+def test_model_registry_register_resolve_list():
+    reg = default_registry()
+    assert reg.list() == ["smollm-135m", "tiny-ddim"]
+    assert "tiny-ddim" in reg and len(reg) == 2
+    e = reg.resolve("smollm-135m")
+    assert e.family == "lm" and e.config in list_models()
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(e)
+    with pytest.raises(KeyError, match="unknown model"):
+        reg.resolve("missing")
+    for entry in default_entries():
+        entry.validate()
+
+
+def test_configs_registry_exposes_models():
+    models = list_models()
+    assert models == sorted(models)
+    assert "smollm-135m" in models
+
+
+# ---------------------------------------------------------------------------
+# Routing + gid identity.
+# ---------------------------------------------------------------------------
+
+
+def test_gateway_routes_by_model_and_assigns_gids():
+    gw = _two_model_gateway(clock=VirtualClock())
+    assert gw.routes_models
+    assert gw.list_models() == ["tiny-ddim", "smollm-135m"]
+    g0 = gw.submit(model="tiny-ddim", steps=1, seed=0)
+    g1 = gw.submit(model="smollm-135m", steps=1, seed=1)
+    g2 = gw.submit(steps=1, seed=1)            # None -> default (first added)
+    assert (g0, g1, g2) == (0, 1, 2)
+    assert gw.route[g1][0] == "smollm-135m"
+    assert gw.route[g2][0] == "tiny-ddim"
+    # engine-local rids overlap across engines; gids never do
+    assert gw.route[g0][1] == gw.route[g1][1] == 0
+    with pytest.raises(KeyError, match="unknown model"):
+        gw.submit(model="missing", steps=1)
+    res = gw.run()
+    assert set(res) == {0, 1, 2}
+    for gid, rs in res.items():
+        assert rs.gid == gid
+        assert rs.model == gw.route[gid][0]
+    # distinct apply scales prove requests ran on their routed engine
+    x2 = gw.pop_result(g2).x0
+    assert not np.allclose(np.asarray(gw.results[g1].x0)[..., 0, 0, 0],
+                           np.asarray(x2)[..., 0, 0, 0])
+
+
+def test_gateway_rejects_duplicate_and_busy_engines():
+    gw = ServingGateway()
+    entry = default_entries()[0]
+    gw.add_model(entry, _stub_engine())
+    with pytest.raises(ValueError, match="already hosted"):
+        gw.add_model(entry, _stub_engine())
+    busy = _stub_engine()
+    busy.submit(steps=1)
+    with pytest.raises(ValueError, match="already has requests"):
+        gw.add_model(default_entries()[1], busy)
+    with pytest.raises(RuntimeError, match="no models"):
+        ServingGateway().submit(steps=1)
+
+
+def test_gateway_single_model_is_behavior_identical():
+    """Hosting one engine behind the gateway must not change outcomes:
+    same trace, same virtual clock -> same digest as the bare engine."""
+    mix = RequestMix(samplers=("ddim", "plms"), steps=2, steps_jitter=1,
+                     priorities=(1, 0))
+    reqs = open_loop_trace("poisson", 6, seed=4, mix=mix, rate=30.0)
+
+    eng = _stub_engine(max_batch=2, clock=VirtualClock())
+    submit_trace(eng, reqs)
+    direct = outcome_digest(eng.run())
+
+    clock = VirtualClock()
+    gw = ServingGateway(clock=clock)
+    gw.add_model(default_entries()[0],
+                 _stub_engine(max_batch=2, clock=clock))
+    submit_trace(gw, reqs)
+    via_gateway = outcome_digest(gw.run())
+    assert via_gateway == direct
+
+
+def test_gateway_two_model_replay_is_deterministic():
+    mix = RequestMix(samplers=("ddim",), steps=2, steps_jitter=1,
+                     models=("tiny-ddim", "smollm-135m"))
+    reqs = open_loop_trace("poisson", 8, seed=7, mix=mix, rate=40.0)
+
+    def once():
+        gw = _two_model_gateway(clock=VirtualClock())
+        submit_trace(gw, reqs)
+        res = gw.run()
+        for name in gw.list_models():
+            bank = gw.engine(name).bank
+            assert (bank.builds + bank.build_failures
+                    == bank.misses + bank.prefetches), name
+        return outcome_digest(res), gw.stats()
+
+    d1, s1 = once()
+    d2, s2 = once()
+    assert d1 == d2
+    assert s1["aggregate"]["requests"] == 8
+    # both models actually served traffic, goodput reported per model
+    for name in ("tiny-ddim", "smollm-135m"):
+        assert s1["per_model"][name]["engine"]["requests"] == 4
+        assert s1["per_model"][name]["summary"]["goodput_frac"] == \
+            s2["per_model"][name]["summary"]["goodput_frac"]
+
+
+def test_gateway_shared_collector_and_scenarios():
+    assert {"mixed_model", "per_model_slo"} <= set(list_scenarios())
+    scn = get_scenario("mixed_model")
+    scn = dataclasses.replace(
+        scn, n_requests=4,
+        mix=dataclasses.replace(scn.mix, steps=1, steps_jitter=0))
+    gw = _two_model_gateway(clock=VirtualClock())
+    collector = MetricsCollector()
+    summary = run_scenario(scn, gw, seed=0, collector=collector)
+    assert summary["requests"] == 4
+    assert summary["scenario"] == "mixed_model"
+    # the shared collector saw completions from both engines
+    assert len(collector.events) == 4
+
+
+def test_per_model_slo_scenario_deadlines_follow_models():
+    trace = build_trace(get_scenario("per_model_slo"), seed=0, n=6)
+    for tr in trace:
+        if tr.model == "tiny-ddim":
+            assert tr.deadline is not None
+        else:
+            assert tr.model == "smollm-135m" and tr.deadline is None
+
+
+def test_gateway_under_shared_sim_clock():
+    """One SimClock across both engines: time advances for each engine's
+    compute on a single axis, and the run still drains deterministically."""
+    sim = SimClock(tick_base_s=0.01, sample_s=0.005)
+    gw = ServingGateway(now_fn=sim.now, max_idle_sleep=0.0)
+    entries = {e.name: e for e in default_entries()}
+    e1 = _stub_engine(max_batch=2, now_fn=sim.now, max_idle_sleep=0.0)
+    e2 = _stub_engine(max_batch=2, scale=0.3, now_fn=sim.now,
+                      max_idle_sleep=0.0)
+    sim.attach(e1)
+    sim.attach(e2)
+    gw.add_model(entries["tiny-ddim"], e1)
+    gw.add_model(entries["smollm-135m"], e2)
+    mix = RequestMix(steps=1, steps_jitter=0,
+                     models=("tiny-ddim", "smollm-135m"))
+    submit_trace(gw, open_loop_trace("poisson", 4, seed=3, mix=mix,
+                                     rate=50.0))
+    res = gw.run()
+    assert len(res) == 4
+    assert sim.now() > 0.0
+    assert all(rs.finished_at <= sim.now() for rs in res.values())
+
+
+# ---------------------------------------------------------------------------
+# LM engine adapter.
+# ---------------------------------------------------------------------------
+
+
+def _tiny_lm():
+    cfg = LMConfig(name="tiny-test-lm", n_layers=1, d_model=16, n_heads=2,
+                   n_kv=2, d_ff=32, vocab=32, dtype=jnp.float32)
+    params = lm_init(jax.random.PRNGKey(0), cfg)
+    bank = WeightBank(params, None, {}, None, None, 1, max_cached=1,
+                      build_fn=lambda p: p)
+    return cfg, bank
+
+
+def test_lm_engine_serves_and_reconciles():
+    cfg, bank = _tiny_lm()
+    eng = LMServingEngine(cfg, bank, max_batch=2, prompt_len=3)
+    r0 = eng.submit(steps=4, seed=1)
+    r1 = eng.submit(steps=2, seed=2)
+    res = eng.run()
+    assert set(res) == {r0, r1}
+    out0 = res[r0].x0
+    assert out0.shape == (4,) and out0.dtype == np.int32
+    assert res[r1].x0.shape == (2,)
+    assert res[r0].n_evals == 4 and res[r1].n_evals == 2
+    assert (bank.builds + bank.build_failures
+            == bank.misses + bank.prefetches)
+    s = eng.stats()
+    assert s["requests"] == 2 and s["buckets"] == [1]
+    assert s["padded_samples"] == 0
+    assert "bank_builds" in s
+
+
+def test_lm_engine_deterministic_and_deadline_expiry():
+    cfg, bank = _tiny_lm()
+
+    def decode(seed):
+        eng = LMServingEngine(cfg, bank, max_batch=1,
+                              clock=VirtualClock())
+        rid = eng.submit(steps=3, seed=seed)
+        return eng.run()[rid].x0.tolist()
+
+    assert decode(5) == decode(5)
+    assert decode(5) != decode(6)   # seed-derived prompt differs
+
+    eng = LMServingEngine(cfg, bank, max_batch=1, clock=VirtualClock())
+    rid = eng.submit(steps=2, seed=0, arrival=0.0, deadline=-1.0)
+    res = eng.run()
+    assert res[rid].expired and res[rid].x0 is None
+
+
+def test_decode_state_steps_left_counts_prefill():
+    cfg, _ = _tiny_lm()
+    dec = DecodeState(cfg, seed=0, gen_len=3, prompt_len=2)
+    assert dec.kind == "lm"
+    assert dec.steps_left == 5      # prompt not yet prefetched into cache
+    assert not dec.done
+
+
+# ---------------------------------------------------------------------------
+# Trace v2 back-compat (satellite: v1 loads + round-trips; mixed-model
+# capture round-trips).
+# ---------------------------------------------------------------------------
+
+
+def test_v1_golden_trace_loads_with_default_model_and_roundtrips(tmp_path):
+    reqs, header = load_trace(resolve_trace_path(GOLDEN))
+    assert header["version"] == 1
+    assert all(tr.model is None for tr in reqs)
+    out = str(tmp_path / "resaved.jsonl")
+    save_trace(out, reqs)
+    again, header2 = load_trace(out)
+    assert header2["version"] == 2
+    assert again == reqs
+    # v1 requests have no model field, so their encoded lines are
+    # identical before and after the version bump
+    v1_lines = open(resolve_trace_path(GOLDEN)).read().splitlines()[1:]
+    v2_lines = open(out).read().splitlines()[1:]
+    assert sorted(json.loads(ln)["seed"] for ln in v1_lines) == \
+        sorted(json.loads(ln)["seed"] for ln in v2_lines)
+
+
+def test_v1_header_without_model_field_accepted(tmp_path):
+    p = tmp_path / "v1.jsonl"
+    p.write_text(
+        json.dumps({"format": "repro.traffic.trace", "version": 1,
+                    "meta": {}}) + "\n"
+        + json.dumps({"arrival": 0.1, "steps": 2}) + "\n")
+    reqs, header = load_trace(str(p))
+    assert header["version"] == 1
+    assert reqs[0].model is None and reqs[0].steps == 2
+
+
+def test_trace_rejects_bad_model_field():
+    from repro.serving.traffic import validate_trace
+    from repro.serving.traffic.trace import TraceRequest
+    with pytest.raises(ValueError, match="model"):
+        validate_trace([TraceRequest(arrival=0.0, steps=1, model="")])
+
+
+def test_mixed_model_capture_roundtrips(tmp_path):
+    mix = RequestMix(steps=1, steps_jitter=0,
+                     models=("tiny-ddim", "smollm-135m"))
+    reqs = open_loop_trace("poisson", 6, seed=11, mix=mix, rate=40.0)
+    path = str(tmp_path / "cap.jsonl")
+
+    gw = _two_model_gateway(clock=VirtualClock())
+    writer = TraceWriter(path, meta={"src": "gw"}).attach(gw)
+    submit_trace(gw, reqs)
+    gw.run()
+    writer.close()
+
+    captured, header = load_trace(path)
+    assert header["version"] == 2
+    assert len(captured) == 6
+    # gateway-wide gids, not per-engine rids, land in the capture —
+    # unique, and routing survives the round-trip
+    assert sorted(tr.rid for tr in captured) == list(range(6))
+    assert [tr.model for tr in captured] == [tr.model for tr in reqs]
+    assert [tr.seed for tr in captured] == [tr.seed for tr in reqs]
+
+    gw2 = _two_model_gateway(clock=VirtualClock())
+    submit_trace(gw2, captured)
+    res = gw2.run()
+    assert len(res) == 6
+    by_model = {}
+    for gid, rs in res.items():
+        by_model.setdefault(rs.model, 0)
+        by_model[rs.model] += 1
+    assert by_model == {"tiny-ddim": 3, "smollm-135m": 3}

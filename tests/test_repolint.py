@@ -176,6 +176,21 @@ def test_import_layering_sublayer_resolution():
     assert ok == []
 
 
+def test_import_layering_gateway_sublayer():
+    cfg = Config({"layers": {
+        "serving.gateway": ["serving", "serving.traffic"],
+        "serving": []}})
+    # gateway sits above the engine: importing it is a declared edge...
+    ok = _lint("from repro.serving.engine import x\n",
+               "src/repro/serving/gateway/gateway.py", "import-layering",
+               cfg)
+    assert ok == []
+    # ...but nothing below may import the gateway back
+    bad = _lint("from repro.serving.gateway import ServingGateway\n",
+                "src/repro/serving/engine.py", "import-layering", cfg)
+    assert len(bad) == 1 and "serving.gateway" in bad[0].message
+
+
 # ---------------------------------------------------------------------------
 # tracer-purity
 # ---------------------------------------------------------------------------

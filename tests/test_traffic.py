@@ -78,7 +78,7 @@ def test_trace_roundtrip(tmp_path):
     loaded, header = load_trace(path)
     assert loaded == reqs
     assert header["meta"] == {"note": "roundtrip"}
-    assert header["version"] == 1
+    assert header["version"] == 2
     # rids assigned by arrival order, arrivals ascending
     assert [tr.rid for tr in loaded] == list(range(7))
     arr = [tr.arrival for tr in loaded]

@@ -225,7 +225,8 @@ class ImportLayeringRule(Rule):
             return None  # top-level module (e.g. version.py): unlayered
         layer = parts[0]
         if layer == "serving" and len(parts) > 2 and parts[1] in ("obs",
-                                                                  "traffic"):
+                                                                  "traffic",
+                                                                  "gateway"):
             return f"serving.{parts[1]}"
         return layer
 
@@ -236,7 +237,8 @@ class ImportLayeringRule(Rule):
             return None
         layer = parts[1]
         if layer == "serving" and len(parts) > 2 and parts[2] in ("obs",
-                                                                  "traffic"):
+                                                                  "traffic",
+                                                                  "gateway"):
             return f"serving.{parts[2]}"
         return layer
 
