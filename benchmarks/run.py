@@ -16,7 +16,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: t1,t4,t5,t7,fig3,fig4,kernels,serving,"
-                         "gateway,analysis")
+                         "gateway,fleet,analysis")
     ap.add_argument("--retrain", action="store_true")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -34,8 +34,9 @@ def main() -> None:
 
     # every remaining section needs the trained fixture (and jax); an
     # `--only analysis` run must stay dependency-light and sub-minute,
-    # and the gateway section quantizes from init (no trained fixture)
-    if only is None or (only - {"analysis", "gateway"}):
+    # and the gateway/fleet sections quantize from init (no trained
+    # fixture)
+    if only is None or (only - {"analysis", "gateway", "fleet"}):
         from benchmarks.common import get_tiny_ddim
         get_tiny_ddim(retrain=args.retrain)  # build/reuse trained fixture
         print(f"# fixture ready ({time.time() - t0:.0f}s)")
@@ -53,6 +54,10 @@ def main() -> None:
         from benchmarks import gateway_bench
         print("## gateway (name,us_per_call,derived)")
         results["gateway"] = gateway_bench.rows()
+    if want("fleet"):
+        from benchmarks import fleet_bench
+        print("## fleet (name,us_per_call,derived)")
+        results["fleet"] = fleet_bench.rows()
     if want("fig4"):
         print("## fig4: AAL strategies (paper: unsigned+zp improves >95%)")
         results["fig4"] = paper_tables.fig4_aal_strategies()

@@ -108,6 +108,10 @@ class DiffusionServingEngine:
         # (obs gauges/spans carry it; None keeps single-model output
         # byte-identical to the pre-gateway format)
         self.model = model
+        # replica: identity label when hosted as a fleet replica (the
+        # FleetRouter sets it after construction); obs gauges gain a
+        # {replica=...} label and spans land on a per-replica track
+        self.replica: str | None = None
         self.cfg = cfg
         self.sched = sched
         self.bank = bank
@@ -194,7 +198,7 @@ class DiffusionServingEngine:
         rs = RequestState(req, state, submitted_at=self._now())
         self.batcher.submit(rs)
         if self.obs.enabled:
-            self.obs.tracer.set_track(self.model)
+            self.obs.tracer.set_track(self.replica or self.model)
             self.obs.tracer.async_begin(
                 "request", rid, cat="request",
                 args={"steps": steps, "sampler": sampler,
@@ -211,7 +215,7 @@ class DiffusionServingEngine:
         obs = self.obs
         tick_span = None
         if obs.enabled:
-            obs.tracer.set_track(self.model)
+            obs.tracer.set_track(self.replica or self.model)
             tick_span = obs.tracer.begin(
                 "tick", cat="engine", args={"tick": self.tick_count})
         now = self._now()
@@ -448,8 +452,11 @@ class DiffusionServingEngine:
             if (self._advance is None and not self.batcher.inflight
                     and self.batcher.pending):
                 wait = self.batcher.next_arrival() - self._now()
-                if wait > 0:
-                    time.sleep(min(wait, max(cap, 0.0)))
+                # cap <= 0 means "never sleep" (simulated clocks spin
+                # through ticks to advance time) — sleep(0) would busy-
+                # spin while still counting as an idle sleep
+                if wait > 0 and cap > 0:
+                    time.sleep(min(wait, cap))
                     self.n_idle_sleeps += 1
         # settle outstanding background builds so post-run stats (builds
         # vs misses+prefetches) reconcile deterministically

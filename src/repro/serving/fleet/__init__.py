@@ -1,0 +1,10 @@
+"""Multi-host serving fleet: N engine replicas, pluggable placement.
+
+See ``fleet.fleet`` for the router design (placement-at-arrival,
+segment-affinity routing against per-replica weight banks, the shared
+clock run() driver, and the 1-replica golden identity).
+"""
+from repro.serving.fleet.fleet import (PLACEMENTS, EngineReplica,
+                                       FleetRouter)
+
+__all__ = ["FleetRouter", "EngineReplica", "PLACEMENTS"]

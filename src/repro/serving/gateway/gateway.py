@@ -162,9 +162,16 @@ class ServingGateway:
         return gid
 
     def pop_result(self, gid: int):
+        """Hand a finished request to its caller and drop *every* piece of
+        per-request bookkeeping — ``results``, the gid routing entry, and
+        the hosted model's rid->gid map. A long-lived gateway that popped
+        results but kept route/gid_of entries would leak one dict entry
+        per request forever."""
         rs = self.results.pop(gid)
-        name, rid = self.route[gid]
-        self._models[name].engine.results.pop(rid, None)
+        name, rid = self.route.pop(gid)
+        m = self._models[name]
+        m.engine.results.pop(rid, None)
+        m.gid_of.pop(rid, None)
         return rs
 
     # -- driver ------------------------------------------------------------
@@ -204,8 +211,9 @@ class ServingGateway:
                     and any(e.batcher.pending for e in engines)):
                 wait = min(e.batcher.next_arrival() for e in engines
                            if e.batcher.pending) - self._now()
-                if wait > 0:
-                    time.sleep(min(wait, max(cap, 0.0)))
+                # cap <= 0 disables sleeping entirely (see engine.run)
+                if wait > 0 and cap > 0:
+                    time.sleep(min(wait, cap))
                     self.n_idle_sleeps += 1
         for e in engines:
             e.bank.drain()

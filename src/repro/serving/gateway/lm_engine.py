@@ -303,8 +303,9 @@ class LMServingEngine:
             if (self._advance is None and not self.batcher.inflight
                     and self.batcher.pending):
                 wait = self.batcher.next_arrival() - self._now()
-                if wait > 0:
-                    time.sleep(min(wait, max(cap, 0.0)))
+                # cap <= 0 disables sleeping entirely (see engine.run)
+                if wait > 0 and cap > 0:
+                    time.sleep(min(wait, cap))
                     self.n_idle_sleeps += 1
         self.bank.drain()
         return self.results

@@ -77,6 +77,15 @@ class Observability:
 
     # -- per-tick / run-end registry sync ------------------------------------
 
+    @staticmethod
+    def _engine_labels(engine) -> dict:
+        lab = {}
+        if getattr(engine, "model", None):
+            lab["model"] = engine.model
+        if getattr(engine, "replica", None):
+            lab["replica"] = engine.replica
+        return lab
+
     def sample(self, engine) -> None:
         """Cheap per-tick snapshot of engine/bank/scheduler counters into
         registry gauges + a Perfetto counter-track sample. Reads plain
@@ -87,12 +96,12 @@ class Observability:
         m = self.metrics
         b = engine.batcher
         bank = engine.bank
-        # engines hosted behind the gateway carry a model identity: their
-        # gauges become labeled series so two models never clobber one
-        # family; a standalone engine (model=None) keeps the unlabeled
-        # names byte-identical to the pre-gateway exposition
-        lab = ({"model": engine.model}
-               if getattr(engine, "model", None) else {})
+        # engines hosted behind the gateway carry a model identity, fleet
+        # replicas a replica identity: their gauges become labeled series
+        # so two engines never clobber one family; a standalone engine
+        # (model=None, replica=None) keeps the unlabeled names
+        # byte-identical to the pre-gateway exposition
+        lab = self._engine_labels(engine)
         m.set("engine_ticks", engine.tick_count, **lab)
         m.set("engine_forwards", engine.n_forwards, **lab)
         m.set("engine_finished", engine.n_finished, **lab)
@@ -127,8 +136,7 @@ class Observability:
             return
         self.sample(engine)
         m = self.metrics
-        lab = ({"model": engine.model}
-               if getattr(engine, "model", None) else {})
+        lab = self._engine_labels(engine)
         for k, v in engine.stats().items():
             if isinstance(v, (int, float, bool)):
                 m.set(f"engine_{k}", float(v), **lab)

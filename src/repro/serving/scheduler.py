@@ -46,6 +46,7 @@ Policy (documented for the README/tests):
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Callable
 
@@ -167,8 +168,19 @@ class RequestState:
     @property
     def latency(self) -> float | None:
         """Service latency from *arrival* (a trace request submitted ahead
-        of its arrival time hasn't waited while merely scheduled)."""
-        if self.finished_at is None:
+        of its arrival time hasn't waited while merely scheduled). None
+        until completion — and None forever for expired requests, which
+        never ran: folding their refusal time into completion percentiles
+        would poison p95/p99 (see ``expired_after_s``)."""
+        if self.finished_at is None or self.expired:
+            return None
+        return self.finished_at - max(self.submitted_at, self.req.arrival)
+
+    @property
+    def expired_after_s(self) -> float | None:
+        """How long past arrival an expired request waited before the
+        scheduler refused it; None for non-expired requests."""
+        if not self.expired or self.finished_at is None:
             return None
         return self.finished_at - max(self.submitted_at, self.req.arrival)
 
@@ -210,8 +222,11 @@ class ContinuousBatcher:
                 - remaining_evals(rs) * self.cost.sample_s * padded_rows)
 
     def submit(self, rs: RequestState) -> None:
-        self.pending.append(rs)
-        self.pending.sort(key=lambda r: (r.req.arrival, r.req.rid))
+        # pending must stay sorted by (arrival, rid) — admit() relies on
+        # the due prefix. insort is O(n) per submit; re-sorting the whole
+        # list each time was O(n^2 log n) over a bulk trace ingest.
+        bisect.insort(self.pending, rs,
+                      key=lambda r: (r.req.arrival, r.req.rid))
 
     def next_arrival(self) -> float | None:
         return self.pending[0].req.arrival if self.pending else None

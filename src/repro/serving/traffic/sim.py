@@ -24,11 +24,21 @@ from __future__ import annotations
 
 
 class SimClock:
-    """now_fn-compatible clock advanced by the engine's own compute."""
+    """now_fn-compatible clock advanced by the engine's own compute.
 
-    def __init__(self, tick_base_s: float = 0.02, sample_s: float = 0.015):
+    ``build_s`` > 0 additionally charges every weight-bank segment build
+    (merge + pack) through the bank's ``on_build`` seam — the cost that
+    makes cold segment switches *matter* in simulated time (the fleet's
+    affinity-vs-round-robin rows hinge on it). The default 0.0 keeps
+    every pre-existing bench row and the obs-overhead gate's pinned
+    goodput baseline bit-identical.
+    """
+
+    def __init__(self, tick_base_s: float = 0.02, sample_s: float = 0.015,
+                 build_s: float = 0.0):
         self.tick_base_s = tick_base_s
         self.sample_s = sample_s
+        self.build_s = build_s
         self.t = 0.0
         # forward counters are tracked per attached engine: one SimClock
         # serves every engine behind a multi-model gateway, and engine A's
@@ -56,6 +66,13 @@ class SimClock:
             self._fwd_seen[id(e)] = e.n_forwards
 
         engine.on_tick_end.append(idle_advance)
+        if self.build_s > 0:
+            def charge_build(bank, seg):
+                self.t += self.build_s
+
+            engine.bank.on_build.append(charge_build)
         engine.batcher.cost.sample_s = self.sample_s
-        engine.batcher.cost.switch_s = self.tick_base_s
+        # prime the switch estimate with what the clock actually charges
+        # per cold build (tick_base_s when builds are free, as before)
+        engine.batcher.cost.switch_s = self.build_s or self.tick_base_s
         return self

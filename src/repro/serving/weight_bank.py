@@ -180,7 +180,7 @@ class WeightBank:
     def __init__(self, q_params: dict, plan: QuantPlan | None, hubs: dict,
                  router: dict, talora_cfg: talora.TALoRAConfig, T: int, *,
                  max_cached: int = 4, fallback_dtype=jnp.bfloat16,
-                 lock_factory=None, build_fn=None):
+                 lock_factory=None, build_fn=None, signatures=None):
         self.q_params = q_params
         self.plan = plan
         # build_fn: alternative packer ``params -> packed tree`` replacing
@@ -199,7 +199,15 @@ class WeightBank:
         self.fallback_dtype = fallback_dtype
         self.names = sorted(hubs) if hubs else []
 
-        if hubs and router is not None:
+        if signatures is not None:
+            # precomputed (T, k) routing-signature array overriding the
+            # router evaluation — the seam fleet benches and placement
+            # tests use to pin an exact segmentation (e.g. per-timestep)
+            # without training a router to produce it
+            sig = np.asarray(signatures)
+            if sig.shape[0] != T:
+                raise ValueError(f"signatures rows {sig.shape[0]} != T={T}")
+        elif hubs and router is not None:
             sig = np.asarray(talora.routing_signatures(
                 router, jnp.arange(T), self.names, talora_cfg))
         else:
@@ -238,6 +246,13 @@ class WeightBank:
         self.build_failures = 0
         self._prefetched: set[int] = set()
         self.pack_stats: dict | None = None
+        # (bank, seg) after every completed build install — the seam
+        # simulated service clocks charge merge+pack time through (the
+        # engine's on_forward equivalent for segment switches). Fired
+        # outside ``_lock``; under a SimClock builds are synchronous
+        # (attach forces sync prefetch), so the charge lands inside the
+        # tick that stalled on the build.
+        self.on_build: list = []
         # observability: the engine propagates its bundle here so build/
         # prefetch spans (including those emitted from the background
         # worker thread) land in the same trace buffer. Spans are emitted
@@ -396,6 +411,8 @@ class WeightBank:
             self._building.pop(seg, None)
             self.builds += 1
             self._trim()
+        for cb in self.on_build:      # outside _lock, like the spans
+            cb(self, seg)
         fut.set_result(params)
         return params
 

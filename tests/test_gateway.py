@@ -222,6 +222,26 @@ def test_per_model_slo_scenario_deadlines_follow_models():
             assert tr.model == "smollm-135m" and tr.deadline is None
 
 
+def test_gateway_pop_result_prunes_all_bookkeeping():
+    """Regression: pop_result used to drop only ``results``, leaking the
+    gid route entry, the model's rid->gid map, and the engine-local
+    result for every request a long-lived gateway ever served."""
+    gw = _two_model_gateway(clock=VirtualClock())
+    gids = [gw.submit(model=m, steps=1, seed=i)
+            for i, m in enumerate(("tiny-ddim", "smollm-135m") * 2)]
+    res = gw.run()
+    assert len(res) == 4
+    for g in gids:
+        rs = gw.pop_result(g)
+        assert rs.gid == g
+    assert gw.results == {} and gw.route == {}
+    for name in gw.list_models():
+        assert gw._models[name].gid_of == {}
+        assert gw.engine(name).results == {}
+    with pytest.raises(KeyError):
+        gw.pop_result(gids[0])
+
+
 def test_gateway_under_shared_sim_clock():
     """One SimClock across both engines: time advances for each engine's
     compute on a single axis, and the run still drains deterministically."""

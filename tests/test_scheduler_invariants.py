@@ -169,6 +169,34 @@ def test_batcher_admit_respects_priority_arrival_rid(seed):
     assert leftover | taken == set(range(n))
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_batcher_pending_order_independent_of_submit_order(seed):
+    """Regression for the insort submit: a shuffled trace must leave
+    ``pending`` in exactly the (arrival, rid) order an in-order ingest
+    produces — admission waves can't depend on ingest order."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 12))
+    key = jax.random.PRNGKey(0)
+    reqs = [(rid, float(rng.uniform(0.0, 2.0))) for rid in range(n)]
+    # duplicate arrivals exercise the rid tiebreak
+    if n >= 4:
+        reqs[1] = (1, reqs[0][1])
+
+    def ingest(order):
+        b = ContinuousBatcher(max_batch=4)
+        for rid, arrival in order:
+            st_ = sampler_init("ddim", SCHED, (1, 2, 2, 3), key, steps=1)
+            b.submit(RequestState(
+                GenRequest(rid, steps=1, arrival=arrival), st_))
+        return [(r.req.arrival, r.req.rid) for r in b.pending]
+
+    in_order = ingest(sorted(reqs, key=lambda x: (x[1], x[0])))
+    shuffled = list(reqs)
+    rng.shuffle(shuffled)
+    assert ingest(shuffled) == in_order == sorted(in_order)
+
+
 def _mk_inflight(b, rid, *, deadline=None, last_tick=0):
     return _mk_inflight_fx(b, rid, steps=2, deadline=deadline,
                            last_tick=last_tick)

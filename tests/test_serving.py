@@ -23,7 +23,7 @@ from repro.diffusion.schedule import make_schedule, sample_timesteps
 from repro.nn.unet import io_sites, unet_apply, unet_init
 from repro.quant.fakequant import (KIND_FP_SIGNED, KIND_FP_UNSIGNED,
                                    QuantizerParams)
-from repro.serving import (DiffusionServingEngine, WeightBank,
+from repro.serving import (DiffusionServingEngine, VirtualClock, WeightBank,
                            act_qps_from_plan, default_serving_plan,
                            segments_of)
 from repro.serving.scheduler import ContinuousBatcher, GenRequest, RequestState
@@ -510,6 +510,40 @@ def test_engine_run_sleeps_to_arrival_instead_of_busy_polling():
     # 2 ms busy-poll would have slept dozens of times
     assert eng.n_idle_sleeps <= 4
     assert eng.stats()["idle_sleeps"] == eng.n_idle_sleeps
+
+
+def test_engine_idle_sleep_cap_zero_never_sleeps():
+    """Regression: ``max_idle_sleep=0`` used to call ``time.sleep(0)``
+    in a hot loop (wait capped at zero still entered the sleep branch,
+    counting a bogus idle sleep per spin). A zero cap must mean "poll,
+    never sleep" — the run completes and counts zero idle sleeps."""
+    sched = make_schedule("linear", T)
+    eng = _stub_engine(2, sched, _single_segment_bank())
+    for rid, arr in enumerate((0.0, 0.02, 0.04)):
+        eng.submit(steps=1, seed=rid, arrival=arr)
+    res = eng.run(max_idle_sleep=0.0)
+    assert len(res) == 3
+    assert eng.n_idle_sleeps == 0
+    assert eng.stats()["idle_sleeps"] == 0
+
+
+def test_request_latency_none_for_expired():
+    """Expired requests never ran: ``latency`` must stay None (keeping
+    them out of completion percentiles) and ``expired_after_s`` records
+    how long past arrival the scheduler held them before refusing."""
+    sched = make_schedule("linear", T)
+    eng = _stub_engine(2, sched, _single_segment_bank(),
+                       clock=VirtualClock())
+    dead = eng.submit(steps=1, seed=0, arrival=0.0, deadline=-1.0)
+    ok = eng.submit(steps=1, seed=1, arrival=0.0)
+    res = eng.run()
+    assert res[dead].expired
+    assert res[dead].latency is None
+    assert res[dead].expired_after_s is not None
+    assert res[dead].expired_after_s >= 0.0
+    assert not res[ok].expired
+    assert isinstance(res[ok].latency, float) and res[ok].latency >= 0.0
+    assert res[ok].expired_after_s is None
 
 
 # ---------------------------------------------------------------------------

@@ -226,7 +226,8 @@ class ImportLayeringRule(Rule):
         layer = parts[0]
         if layer == "serving" and len(parts) > 2 and parts[1] in ("obs",
                                                                   "traffic",
-                                                                  "gateway"):
+                                                                  "gateway",
+                                                                  "fleet"):
             return f"serving.{parts[1]}"
         return layer
 
@@ -238,7 +239,8 @@ class ImportLayeringRule(Rule):
         layer = parts[1]
         if layer == "serving" and len(parts) > 2 and parts[2] in ("obs",
                                                                   "traffic",
-                                                                  "gateway"):
+                                                                  "gateway",
+                                                                  "fleet"):
             return f"serving.{parts[2]}"
         return layer
 
